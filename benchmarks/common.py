@@ -1,0 +1,39 @@
+"""Shared benchmark utilities: timing, graph generation, CSV output.
+
+All PageRank benchmarks run the REAL jitted engine on this host (CPU device;
+the Pallas kernels are validated separately in interpret mode — interpret
+timing is meaningless). Numbers here are therefore CPU-relative: the paper's
+*relationships* (DF-P vs Static vs ND vs DT speedups, error ordering) are the
+reproduction target; absolute A100 numbers are not reproducible without the
+hardware (EXPERIMENTS.md §Benchmarks).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+__all__ = ["timeit", "geomean", "emit"]
+
+
+def timeit(fn, *args, warmup=1, iters=3, **kw):
+    for _ in range(warmup):
+        out = fn(*args, **kw)
+        jax.block_until_ready(out)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return min(ts), out
+
+
+def geomean(xs):
+    xs = np.asarray([max(x, 1e-12) for x in xs])
+    return float(np.exp(np.mean(np.log(xs))))
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    print(f"{name},{us_per_call:.1f},{derived}")

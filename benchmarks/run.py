@@ -1,0 +1,29 @@
+"""Benchmark harness: one module per paper table/figure.
+
+  Table 1 / Fig. 2  -> bench_static     (throughput, edges/s)
+  Table 2 / Fig. 3  -> bench_dynamic    (DF-P vs Static/ND/DT/DF, temporal)
+  Fig. 4 / Fig. 5   -> bench_sweep      (random batch sweep: runtime + error)
+  Fig. 1            -> bench_partition  (work-partitioning ablation)
+  (beyond paper)    -> bench_fusion     (fused updateRanks accounting)
+
+Prints ``name,us_per_call,derived`` CSV rows.
+"""
+import sys
+
+
+def main() -> None:
+    from . import (bench_static, bench_dynamic, bench_sweep, bench_partition,
+                   bench_fusion)
+    print("name,us_per_call,derived")
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    mods = {"static": bench_static, "dynamic": bench_dynamic,
+            "sweep": bench_sweep, "partition": bench_partition,
+            "fusion": bench_fusion}
+    for key, mod in mods.items():
+        if only and key != only:
+            continue
+        mod.run()
+
+
+if __name__ == '__main__':
+    main()

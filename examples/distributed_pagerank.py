@@ -1,0 +1,39 @@
+"""Distributed PageRank on 8 (forced) host devices: 1-D vertex partition vs
+the beyond-paper 2-D edge partition, both validated against the oracle.
+
+  PYTHONPATH=src python examples/distributed_pagerank.py
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import l1_error, powerlaw_graph, reference_pagerank
+from repro.core.distributed import build_sharded, distributed_static_pagerank
+from repro.core.distributed2d import build_sharded_2d, pagerank_2d
+
+g = powerlaw_graph(2_000, 30_000, seed=1)
+ref = reference_pagerank(g)
+
+# 1-D: vertices over all 8 devices; per-iteration all-gather of c (V floats)
+mesh = jax.make_mesh((4, 2), ("data", "model"))
+sg = build_sharded(g, 8, d_p=16, tile=64)
+r0 = jnp.full((8, sg.n_loc), 1.0 / g.n, jnp.float64)
+r1, it1 = distributed_static_pagerank(mesh, sg, r0)
+print(f"1-D: {int(it1)} iters, L1 vs oracle = "
+      f"{l1_error(np.asarray(r1).reshape(-1)[:g.n], ref):.2e}")
+
+# 2-D: edge blocks on a 2x2 sub-mesh; per-iteration gather is V/2 per device
+mesh2 = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+sg2 = build_sharded_2d(g, 2, 2, d_p=8)
+rc, blk = sg2.out_deg.shape
+r0b = jnp.full((rc, blk), 1.0 / g.n, jnp.float64)
+r2, it2 = pagerank_2d(mesh2, sg2, r0b)
+print(f"2-D: {int(it2)} iters, L1 vs oracle = "
+      f"{l1_error(np.asarray(r2).reshape(-1)[:g.n], ref):.2e}")

@@ -1,0 +1,30 @@
+"""Train a ~100M-param LM for a few hundred steps on CPU with checkpointing.
+
+Uses the smollm-360m *architecture* at reduced width (smoke config ~ a few M
+params for CPU speed; pass --full-width for the real 360M config if you have
+the patience / a TPU).
+
+  PYTHONPATH=src python examples/train_lm.py [--steps 200]
+"""
+import argparse
+import os
+import tempfile
+
+from repro.configs import get_config, smoke_config
+from repro.train import train
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=200)
+ap.add_argument("--full-width", action="store_true")
+args = ap.parse_args()
+
+cfg = get_config("smollm-360m")
+if not args.full_width:
+    cfg = smoke_config(cfg)
+ckpt = os.path.join(tempfile.gettempdir(), "train_lm_ckpt")
+params, history = train(cfg, steps=args.steps, batch=4, seq=128,
+                        ckpt_dir=ckpt, ckpt_every=100, log_every=20)
+first, last = history[0], history[-1]
+print(f"loss {first['loss']:.3f} -> {last['loss']:.3f} over "
+      f"{last['step']} steps ({last['sec']:.0f}s)")
+assert last["loss"] < first["loss"], "loss should decrease"

@@ -1,0 +1,3 @@
+"""repro: TPU-native Static & DF-P PageRank framework (Sahu 2024) +
+multi-arch LM substrate sharing the same distributed runtime."""
+__version__ = "1.0.0"

@@ -1,0 +1,8 @@
+"""Per-architecture configs (assigned pool) + shape specs + registry."""
+from .base import (ArchConfig, MoECfg, MLACfg, RecCfg, get_config,
+                   list_configs, register, smoke_config)
+from .shapes import SHAPES, ShapeSpec, cells, shape_applies
+
+__all__ = ["ArchConfig", "MoECfg", "MLACfg", "RecCfg", "get_config",
+           "list_configs", "register", "smoke_config", "SHAPES", "ShapeSpec",
+           "cells", "shape_applies"]

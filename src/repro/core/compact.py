@@ -1,0 +1,214 @@
+"""Frontier-compacted DF / DF-P — the TPU translation of "skip unaffected
+vertices".
+
+The paper's update kernels do `if not δ_V[v]: continue`; a GPU thread that
+skips costs nothing. Dense XLA arrays don't skip — a masked update still
+pays the full |V|·d_p gather — which erases the paper's headline speedup.
+This module restores it with static-shape *compaction*:
+
+  * affected vertex ids are extracted with jnp.nonzero(size=K) (K is a
+    static capacity, chosen per batch from the initial frontier size);
+  * the rank pull gathers ONLY those K rows of the in-neighbor ELL (+ the
+    affected high-in-degree tile subset), so per-iteration edge work is
+    O(frontier · degree) like the paper's, not O(|E|);
+  * frontier expansion mirrors the paper exactly: it walks the OUT-edges of
+    flagged vertices (out-degree-partitioned forward layout) and scatters
+    flags — work ∝ Σ out-degree(frontier), the same bound as Alg. 5;
+  * if the frontier ever outgrows K, the loop exits and the dense engine
+    (core/dynamic.py) finishes from the current state — correctness never
+    depends on the capacity guess.
+
+One write per affected vertex per iteration is preserved throughout.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .dynamic import DeviceBatch, _loop
+from .frontier import expand_affected, initial_affected
+from .graph import Graph, build_hybrid
+from .pagerank import DeviceGraph, PRParams, to_device
+
+__all__ = ["forward_device_graph", "dfp_pagerank_compact",
+           "df_pagerank_compact"]
+
+
+def forward_device_graph(g: Graph, d_p: int = 64, tile: int = 1024,
+                         **caps) -> DeviceGraph:
+    """Out-edge hybrid layout (the paper's 'Partition G' by out-degree):
+    rows of the ELL are each vertex's OUT-neighbors."""
+    gt = Graph(n=g.n, offsets=g.t_offsets, targets=g.t_sources,
+               t_offsets=g.offsets, t_sources=g.targets)
+    return to_device(build_hybrid(gt, d_p=d_p, tile=tile, **caps))
+
+
+def _compact(flags: jnp.ndarray, k: int, fill: int) -> jnp.ndarray:
+    return jnp.nonzero(flags, size=k, fill_value=fill)[0]
+
+
+def _gather_pull(dg: DeviceGraph, c: jnp.ndarray, idx: jnp.ndarray,
+                 tile_sel: jnp.ndarray) -> jnp.ndarray:
+    """Pull contributions for the K vertices in `idx` only.
+
+    ELL side: gather K rows. High side: `tile_sel` is a compacted list of
+    tile ids whose owner vertex is affected; their sums are scattered into a
+    dense [n]-buffer (cheap: K_t · tile work, one write per tile)."""
+    dt = c.dtype
+    rows_idx = jnp.take(dg.ell_idx, idx, axis=0, mode="fill", fill_value=0)
+    rows_mask = jnp.take(dg.ell_mask, idx, axis=0, mode="fill", fill_value=0.0)
+    low = jnp.sum(jnp.take(c, rows_idx, axis=0) * rows_mask.astype(dt), axis=1)
+
+    tiles = jnp.take(dg.hi_tiles, tile_sel, axis=0, mode="fill", fill_value=0)
+    tmask = jnp.take(dg.hi_tmask, tile_sel, axis=0, mode="fill",
+                     fill_value=0.0)
+    tsums = jnp.sum(jnp.take(c, tiles, axis=0) * tmask.astype(dt), axis=1)
+    slot = jnp.take(dg.hi_rowmap, tile_sel, mode="fill",
+                    fill_value=dg.n_hi_cap - 1)
+    owner = jnp.take(dg.hi_ids, slot)                    # vertex id or n
+    hi_dense = jnp.zeros((dg.n + 1,), dt).at[owner].add(tsums, mode="drop")
+    return low + jnp.take(hi_dense, jnp.minimum(idx, dg.n), axis=0) \
+        * (idx < dg.n)
+
+
+def _scatter_expand(fwd: DeviceGraph, dn_flags: jnp.ndarray, kn: int
+                    ) -> jnp.ndarray:
+    """Paper Alg. 5 expandAffected, compacted: out-neighbors of flagged
+    vertices get marked. Returns a dense bool [n] of newly-marked vertices."""
+    n = fwd.n
+    src = _compact(dn_flags, kn, n)
+    nbr = jnp.take(fwd.ell_idx, jnp.minimum(src, n - 1), axis=0)   # [kn,d_p]
+    msk = jnp.take(fwd.ell_mask, jnp.minimum(src, n - 1), axis=0) \
+        * (src < n)[:, None]
+    out = jnp.zeros((n + 1,), jnp.bool_)
+    tgt = jnp.where(msk > 0, nbr, n)
+    out = out.at[tgt.reshape(-1)].set(True, mode="drop")
+    # high-out-degree frontier vertices: walk their tile lists
+    hi_aff = jnp.take(dn_flags, jnp.minimum(fwd.hi_ids, n - 1),
+                      mode="fill", fill_value=False) & (fwd.hi_ids < n)
+    tile_on = jnp.take(hi_aff, fwd.hi_rowmap)
+    tgt2 = jnp.where((fwd.hi_tmask > 0) & tile_on[:, None], fwd.hi_tiles, n)
+    out = out.at[tgt2.reshape(-1)].set(True, mode="drop")
+    return out[:n]
+
+
+def _tiles_for(dg: DeviceGraph, dv: jnp.ndarray, kt: int):
+    """Compacted ids of high-in-degree tiles whose owner is affected.
+    Returns (tile_sel, n_needed) — callers must treat n_needed > kt as a
+    capacity overflow (silent truncation would corrupt hub ranks)."""
+    n = dg.n
+    owner_aff = jnp.take(dv, jnp.minimum(dg.hi_ids, n - 1),
+                         mode="fill", fill_value=False) & (dg.hi_ids < n)
+    tile_on = jnp.take(owner_aff, dg.hi_rowmap)
+    return _compact(tile_on, kt, dg.hi_tiles.shape[0]), jnp.sum(tile_on)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("params", "k", "kt", "kn", "prune"))
+def _compact_loop(dg: DeviceGraph, fwd: DeviceGraph, r0, dv0, dn0,
+                  params: PRParams, k: int, kt: int, kn: int, prune: bool):
+    n = dg.n
+    dt = r0.dtype
+    d = dg.out_deg.astype(dt)
+    c0 = jnp.asarray((1.0 - params.alpha) / n, dt)
+
+    def body(state):
+        r, dv, dn, _, i = state
+        dv = jnp.where(i > 0, dv | _scatter_expand(fwd, dn, kn), dv)
+        tsel, n_tiles = _tiles_for(dg, dv, kt)
+        overflow = (jnp.sum(dv) > k) | (jnp.sum(dn) > kn) | (n_tiles > kt)
+        idx = _compact(dv, k, n)
+        c = r / d
+        s = _gather_pull(dg, c, idx, tsel)
+        r_i = jnp.take(r, jnp.minimum(idx, n - 1))
+        d_i = jnp.take(d, jnp.minimum(idx, n - 1))
+        if prune:
+            rv = (c0 + params.alpha * (s - r_i / d_i)) / \
+                (1 - params.alpha / d_i)
+        else:
+            rv = c0 + params.alpha * s
+        live = idx < n
+        rv = jnp.where(live, rv, 0.0)
+        r_new = r.at[idx].set(rv, mode="drop")
+        dr = jnp.where(live, jnp.abs(rv - r_i), 0.0)
+        rel = dr / jnp.maximum(jnp.maximum(rv, r_i), 1e-300)
+        if prune:
+            keep = live & ~(rel <= params.tau_p)
+            dv = dv.at[idx].set(False, mode="drop")
+            dv = dv.at[jnp.where(keep, idx, n)].set(True, mode="drop")
+        dn_new = jnp.zeros((n,), jnp.bool_).at[
+            jnp.where(live & (rel > params.tau_f), idx, n)].set(
+            True, mode="drop")
+        # an overflowing iteration must not commit a truncated update: keep
+        # the pre-iteration state and exit with delta=inf (dense fallback)
+        r_new = jnp.where(overflow, r, r_new)
+        dv = jnp.where(overflow, state[1], dv)
+        dn_new = jnp.where(overflow, dn, dn_new)
+        delta = jnp.where(overflow, jnp.asarray(jnp.inf, dt), jnp.max(dr))
+        return r_new, dv, dn_new, delta, i + 1
+
+    def cond(state):
+        r, dv, dn, delta, i = state
+        within = (jnp.sum(dv) <= k) & (jnp.sum(dn) <= kn)
+        return (delta > params.tau) & (i < params.max_iter) & within \
+            & ~jnp.isinf(delta)
+    # NOTE: body sets delta=inf on any capacity overflow (incl. tile list),
+    # so an exit through `within` always routes to the dense fallback.
+
+    # finite sentinel: inf is reserved for the capacity-overflow signal
+    init = (r0, dv0, dn0, jnp.asarray(jnp.finfo(dt).max, dt),
+            jnp.asarray(0, jnp.int32))
+    r, dv, dn, delta, iters = jax.lax.while_loop(cond, body, init)
+    return r, dv, dn, delta, iters
+
+
+def _next_pow2(x: int) -> int:
+    return 1 << max(4, int(np.ceil(np.log2(max(2, x)))))
+
+
+def _df_like_compact(dg, fwd, r_prev, batch: DeviceBatch,
+                     params: PRParams, *, prune: bool, headroom: int = 16):
+    n = dg.n
+    dv, dn = initial_affected(n, batch.del_src, batch.del_dst, batch.ins_src)
+    # initial marking via the compacted out-edge walk (paper Alg. 5), not a
+    # dense O(|E|) pull — the batch is tiny relative to the graph
+    kn_init = min(_next_pow2(int(jnp.sum(dn)) * 2 + 2), n)
+    dv = dv | _scatter_expand(fwd, dn, kn_init)
+    n_init = int(jnp.sum(dv)) + 1
+    k = min(_next_pow2(n_init * headroom), n)
+    kn = k
+    # No tile compaction: affected hubs legitimately need their full tile
+    # lists, and the high side is a small fraction of total edge slots —
+    # the ELL (low-degree majority) is where compaction pays (measured in
+    # EXPERIMENTS.md §Perf: tile truncation forced immediate dense fallback
+    # on power-law graphs, refuting the tile-compaction hypothesis).
+    kt = dg.hi_tiles.shape[0]
+    dn0 = jnp.zeros((n,), jnp.bool_)
+    r, dv, dn, delta, iters = _compact_loop(dg, fwd, r_prev, dv, dn0, params,
+                                            k, kt, kn, prune)
+    if float(delta) > params.tau and int(iters) < params.max_iter:
+        # frontier outgrew the capacity: dense engine finishes the job
+        rest = params._replace(max_iter=params.max_iter - int(iters))
+        r, it2 = _dense_finish(dg, r, dv, dn, rest, prune)
+        iters = iters + it2
+    return r, iters
+
+
+@functools.partial(jax.jit, static_argnames=("params", "prune"))
+def _dense_finish(dg, r, dv, dn, params, prune):
+    return _loop(dg, r, dv, dn, params, expand=True, prune=prune,
+                 closed_form=prune)
+
+
+def dfp_pagerank_compact(dg: DeviceGraph, fwd: DeviceGraph, r_prev,
+                         batch: DeviceBatch, params: PRParams = PRParams()):
+    return _df_like_compact(dg, fwd, r_prev, batch, params, prune=True)
+
+
+def df_pagerank_compact(dg: DeviceGraph, fwd: DeviceGraph, r_prev,
+                        batch: DeviceBatch, params: PRParams = PRParams()):
+    return _df_like_compact(dg, fwd, r_prev, batch, params, prune=False)

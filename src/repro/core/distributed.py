@@ -1,0 +1,283 @@
+"""Multi-device / multi-pod PageRank via shard_map.
+
+1-D vertex partition over all mesh axes (flattened): every shard owns
+``n_loc = n_pad / nd`` vertices — their ELL rows, tile-padded CSR slices,
+ranks and affected flags. The pull model makes the per-iteration communication
+exactly one collective: ``all_gather`` of the contribution vector
+``c = R / outdeg`` (V·4 B), plus a scalar ``pmax`` for convergence — this is
+the paper's "one write per vertex" discipline lifted to the cluster level
+(each device writes only its own rank slice; no cross-device scatter exists).
+
+For DF-P, the frontier flags δ_N ride the same all-gather (packed as f32
+alongside c, one fused collective — see EXPERIMENTS.md §Perf hillclimb).
+
+Elasticity: `build_sharded` is a pure host function of (graph, nd); on device
+failure / resize, rebuild with the new nd and re-enter at the checkpointed
+(R, δ_V) — see train/elastic.py for the generic machinery.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .graph import Graph, build_hybrid
+from .pagerank import PRParams
+
+try:  # JAX >= 0.4.35 spelling
+    from jax import shard_map as _shard_map
+except ImportError:  # pragma: no cover
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+__all__ = ["ShardedGraph", "build_sharded", "distributed_static_pagerank",
+           "distributed_dfp_pagerank", "pagerank_step_specs"]
+
+
+class ShardedGraph(NamedTuple):
+    """Stacked per-shard hybrid layouts. Leading axis = shard."""
+    ell_idx: jnp.ndarray    # [nd, n_loc, d_p] int32, GLOBAL column ids
+    ell_mask: jnp.ndarray   # [nd, n_loc, d_p] f32
+    hi_pos: jnp.ndarray     # [nd, hi_cap] int32, LOCAL row ids (sentinel n_loc)
+    hi_tiles: jnp.ndarray   # [nd, t_cap, tile] int32, GLOBAL column ids
+    hi_tmask: jnp.ndarray   # [nd, t_cap, tile] f32
+    hi_rowmap: jnp.ndarray  # [nd, t_cap] int32
+    out_deg: jnp.ndarray    # [nd, n_loc] int32 (>=1)
+    valid: jnp.ndarray      # [nd, n_loc] bool (False on padding vertices)
+    n_true: int             # real |V| (for the (1-α)/|V| constant)
+
+    @property
+    def nd(self) -> int:
+        return self.ell_idx.shape[0]
+
+    @property
+    def n_loc(self) -> int:
+        return self.ell_idx.shape[1]
+
+
+def build_sharded(g: Graph, nd: int, d_p: int = 64, tile: int = 1024
+                  ) -> ShardedGraph:
+    """Host-side partitioner: round-robin-free contiguous vertex blocks.
+
+    Pads |V| to a multiple of nd with isolated self-loop vertices (masked out
+    of updates and results). Per-shard hi/tile capacities are maxed across
+    shards so stacking gives static shapes (required for jit/shard_map).
+    """
+    n = g.n
+    n_pad = ((n + nd - 1) // nd) * nd
+    n_loc = n_pad // nd
+    indeg = g.in_degree()
+    out_deg = g.out_degree()
+
+    shards = []
+    for s in range(nd):
+        lo, hi = s * n_loc, min((s + 1) * n_loc, n)
+        rows = np.arange(lo, max(lo, hi))
+        shards.append(rows)
+
+    # build per-shard ragged pieces first to find caps
+    pieces = []
+    for rows in shards:
+        ell_i = np.zeros((n_loc, d_p), np.int32)
+        ell_m = np.zeros((n_loc, d_p), np.float32)
+        hi_rows = []
+        tiles = []
+        tmask = []
+        rowmap = []
+        for li, v in enumerate(rows):
+            s0, s1 = g.t_offsets[v], g.t_offsets[v + 1]
+            nbr = g.t_sources[s0:s1]
+            if nbr.size <= d_p:
+                ell_i[li, :nbr.size] = nbr
+                ell_m[li, :nbr.size] = 1.0
+            else:
+                slot = len(hi_rows)
+                hi_rows.append(li)
+                nt = (nbr.size + tile - 1) // tile
+                pad = nt * tile - nbr.size
+                padded = np.concatenate([nbr, np.zeros(pad, np.int32)])
+                m = np.concatenate([np.ones(nbr.size, np.float32),
+                                    np.zeros(pad, np.float32)])
+                tiles.append(padded.reshape(nt, tile))
+                tmask.append(m.reshape(nt, tile))
+                rowmap.extend([slot] * nt)
+        pieces.append((ell_i, ell_m, hi_rows, tiles, tmask, rowmap, rows))
+
+    hi_cap = max(1, max(len(p[2]) for p in pieces))
+    t_cap = max(1, max(len(p[5]) for p in pieces))
+
+    ell_idx = np.stack([p[0] for p in pieces])
+    ell_mask = np.stack([p[1] for p in pieces])
+    hi_pos = np.full((nd, hi_cap), n_loc, np.int32)
+    hi_tiles = np.zeros((nd, t_cap, tile), np.int32)
+    hi_tmask = np.zeros((nd, t_cap, tile), np.float32)
+    hi_rowmap = np.full((nd, t_cap), hi_cap - 1, np.int32)
+    deg = np.ones((nd, n_loc), np.int32)
+    valid = np.zeros((nd, n_loc), bool)
+    for s, (ei, em, hr, ti, tm, rm, rows) in enumerate(pieces):
+        if hr:
+            hi_pos[s, :len(hr)] = np.asarray(hr, np.int32)
+        if rm:
+            hi_tiles[s, :len(rm)] = np.concatenate(ti, axis=0)
+            hi_tmask[s, :len(rm)] = np.concatenate(tm, axis=0)
+            hi_rowmap[s, :len(rm)] = np.asarray(rm, np.int32)
+        deg[s, :rows.size] = out_deg[rows]
+        valid[s, :rows.size] = True
+
+    return ShardedGraph(
+        ell_idx=jnp.asarray(ell_idx), ell_mask=jnp.asarray(ell_mask),
+        hi_pos=jnp.asarray(hi_pos), hi_tiles=jnp.asarray(hi_tiles),
+        hi_tmask=jnp.asarray(hi_tmask), hi_rowmap=jnp.asarray(hi_rowmap),
+        out_deg=jnp.asarray(deg), valid=jnp.asarray(valid), n_true=n)
+
+
+# ---------------------------------------------------------------------------
+# Local (per-shard) pull + update, consuming the gathered contribution vector
+# ---------------------------------------------------------------------------
+
+def _local_pull(sg_loc, c_full: jnp.ndarray) -> jnp.ndarray:
+    dt = c_full.dtype
+    ell_idx, ell_mask = sg_loc["ell_idx"], sg_loc["ell_mask"]
+    low = jnp.sum(jnp.take(c_full, ell_idx, axis=0) * ell_mask.astype(dt),
+                  axis=1)
+    tile_sums = jnp.sum(jnp.take(c_full, sg_loc["hi_tiles"], axis=0)
+                        * sg_loc["hi_tmask"].astype(dt), axis=1)
+    hi_cap = sg_loc["hi_pos"].shape[0]
+    per_slot = jax.ops.segment_sum(tile_sums, sg_loc["hi_rowmap"],
+                                   num_segments=hi_cap)
+    return low.at[sg_loc["hi_pos"]].add(per_slot, mode="drop")
+
+
+def _local_pull_max(sg_loc, x_full: jnp.ndarray) -> jnp.ndarray:
+    dt = x_full.dtype
+    low = jnp.max(jnp.take(x_full, sg_loc["ell_idx"], axis=0)
+                  * sg_loc["ell_mask"].astype(dt), axis=1)
+    tmax = jnp.max(jnp.take(x_full, sg_loc["hi_tiles"], axis=0)
+                   * sg_loc["hi_tmask"].astype(dt), axis=1)
+    hi_cap = sg_loc["hi_pos"].shape[0]
+    per_slot = jnp.maximum(
+        jax.ops.segment_max(tmax, sg_loc["hi_rowmap"], num_segments=hi_cap), 0)
+    return jnp.maximum(low, jnp.zeros_like(low).at[sg_loc["hi_pos"]]
+                       .max(per_slot, mode="drop"))
+
+
+_FIELDS = ("ell_idx", "ell_mask", "hi_pos", "hi_tiles", "hi_tmask",
+           "hi_rowmap", "out_deg", "valid")
+
+
+def _as_dict(sg: ShardedGraph) -> dict:
+    return {k: getattr(sg, k) for k in _FIELDS}
+
+
+def _squeeze_shard(sgd: dict) -> dict:
+    """Inside shard_map each field has leading dim 1 — drop it."""
+    return {k: v[0] for k, v in sgd.items()}
+
+
+def _make_loop(axis, params: PRParams, n_true: int, *, dfp: bool,
+               compact_frontier: bool = False, delta_every: int = 1):
+    """Build the per-shard while-loop body. `axis` is the (tuple of) mesh
+    axis name(s) the vertex dimension is sharded over. `compact_frontier`
+    gathers δ_N as uint8 instead of the rank dtype (§Perf hillclimb #3:
+    the frontier all-gather shrinks 4-8x; the pull-max upcasts locally).
+    `delta_every=k` evaluates the global L-inf all-reduce every k iterations
+    only — the straggler/latency mitigation from DESIGN.md §8: up to k-1
+    surplus (cheap, local) iterations traded for k-fold fewer global syncs."""
+
+    def loop(sgd: dict, r0, dv0, dn0):
+        sgl = _squeeze_shard(sgd)
+        r0, dv0, dn0 = r0[0], dv0[0], dn0[0]
+        dt = r0.dtype
+        d = sgl["out_deg"].astype(dt)
+        valid = sgl["valid"]
+        c0 = jnp.asarray((1.0 - params.alpha) / n_true, dt)
+
+        def body(state):
+            r, dv, dn, _, i = state
+            if dfp:
+                gdt = jnp.uint8 if compact_frontier else dt
+                dn_full = jax.lax.all_gather(dn.astype(gdt), axis, tiled=True)
+                grow = _local_pull_max(sgl, dn_full.astype(dt)) > 0
+                dv = jnp.where(i > 0, dv | grow, dv) & valid
+            c_loc = r / d
+            c_full = jax.lax.all_gather(c_loc, axis, tiled=True)
+            s = _local_pull(sgl, c_full)
+            if dfp:
+                rv = (c0 + params.alpha * (s - r / d)) / (1 - params.alpha / d)
+            else:
+                rv = c0 + params.alpha * s
+            aff = dv & valid
+            r_new = jnp.where(aff, rv, r)
+            dr = jnp.abs(r_new - r)
+            rel = dr / jnp.maximum(r_new, r)
+            if dfp:
+                dv = aff & ~(rel <= params.tau_p)
+                dn_new = rel > params.tau_f
+            else:
+                dv = aff
+                dn_new = dn
+            local = jnp.max(dr)
+            if delta_every > 1:
+                check = (i + 1) % delta_every == 0
+                delta = jnp.where(check, jax.lax.pmax(local, axis),
+                                  jnp.asarray(jnp.inf, dt))
+                delta = jnp.where(check, delta, jnp.asarray(jnp.inf, dt))
+            else:
+                delta = jax.lax.pmax(local, axis)
+            return r_new, dv, dn_new, delta, i + 1
+
+        def cond(state):
+            *_, delta, i = state
+            return (delta > params.tau) & (i < params.max_iter)
+
+        init = (r0, dv0, dn0, jnp.asarray(jnp.inf, dt),
+                jnp.asarray(0, jnp.int32))
+        r, dv, dn, _, iters = jax.lax.while_loop(cond, body, init)
+        return r[None], iters
+
+    return loop
+
+
+def _specs(mesh: Mesh):
+    axis = tuple(mesh.axis_names)
+    shard = P(axis)
+    return axis, shard
+
+
+def pagerank_step_specs(mesh: Mesh):
+    """(in_specs, out_specs) used by the dry-run lowering for this workload."""
+    axis, shard = _specs(mesh)
+    return shard, axis
+
+
+def distributed_static_pagerank(mesh: Mesh, sg: ShardedGraph, r0: jnp.ndarray,
+                                params: PRParams = PRParams(),
+                                delta_every: int = 1):
+    """r0: [nd, n_loc] stacked ranks. Returns (ranks [nd, n_loc], iters)."""
+    axis, shard = _specs(mesh)
+    nd, n_loc = sg.out_deg.shape
+    on = jnp.ones((nd, n_loc), jnp.bool_)
+    off = jnp.zeros((nd, n_loc), jnp.bool_)
+    loop = _make_loop(axis, params, sg.n_true, dfp=False,
+                      delta_every=delta_every)
+    fn = _shard_map(loop, mesh=mesh,
+                    in_specs=({k: shard for k in _FIELDS}, shard, shard, shard),
+                    out_specs=(shard, P()))
+    return jax.jit(fn)(_as_dict(sg), r0, on, off)
+
+
+def distributed_dfp_pagerank(mesh: Mesh, sg: ShardedGraph, r_prev: jnp.ndarray,
+                             dv0: jnp.ndarray, dn0: jnp.ndarray,
+                             params: PRParams = PRParams()):
+    """DF-P on the cluster: dv0/dn0 are the initial affected / to-expand flags
+    ([nd, n_loc], from frontier.initial_affected sharded by the host)."""
+    axis, shard = _specs(mesh)
+    loop = _make_loop(axis, params, sg.n_true, dfp=True)
+    fn = _shard_map(loop, mesh=mesh,
+                    in_specs=({k: shard for k in _FIELDS}, shard, shard, shard),
+                    out_specs=(shard, P()))
+    return jax.jit(fn)(_as_dict(sg), r_prev, dv0, dn0)

@@ -1,0 +1,127 @@
+"""Dynamic PageRank drivers: ND, DT, DF, DF-P (paper Alg. 2).
+
+All five approaches share `update_ranks` (paper Alg. 3) and the convergence
+loop shape of Alg. 1; they differ only in (a) rank initialization, (b) the
+affected mask, and (c) frontier expansion/pruning — exactly the paper's
+decomposition. Every driver is a single jitted `lax.while_loop`.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .frontier import expand_affected, initial_affected, reach_affected
+from .pagerank import DeviceGraph, PRParams, update_ranks
+
+__all__ = ["DeviceBatch", "batch_to_device", "nd_pagerank", "dt_pagerank",
+           "df_pagerank", "dfp_pagerank"]
+
+
+class DeviceBatch(NamedTuple):
+    """Batch update staged on device, padded with id == n ("drop" scatters)."""
+    del_src: jnp.ndarray
+    del_dst: jnp.ndarray
+    ins_src: jnp.ndarray
+    ins_dst: jnp.ndarray
+
+
+def batch_to_device(batch, n: int, pad_to: int | None = None) -> DeviceBatch:
+    def pad(a, cap):
+        a = np.asarray(a, np.int32)
+        if cap is None or a.shape[0] == cap:
+            return jnp.asarray(a)
+        out = np.full(cap, n, np.int32)
+        out[:a.shape[0]] = a
+        return jnp.asarray(out)
+    return DeviceBatch(pad(batch.del_src, pad_to), pad(batch.del_dst, pad_to),
+                       pad(batch.ins_src, pad_to), pad(batch.ins_dst, pad_to))
+
+
+def _loop(dg: DeviceGraph, r0: jnp.ndarray, dv0: jnp.ndarray,
+          dn0: jnp.ndarray, params: PRParams, *, expand: bool, prune: bool,
+          closed_form: bool, pull_sum_fn=None
+          ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Shared Alg. 2 loop. When `expand` is False the affected set is frozen
+    (ND/DT); δ_N is then never produced (track_frontier=False)."""
+
+    def body(state):
+        r, dv, dn, _, i = state
+        if expand:
+            # paper line 16: expansion of the *previous* iteration's frontier,
+            # performed only because convergence was not reached (cond passed).
+            dv = jax.lax.cond(i > 0,
+                              lambda: expand_affected(dg, dv, dn),
+                              lambda: dv)
+        r_new, dv, dn, delta = update_ranks(
+            dg, r, dv, alpha=params.alpha, tau_f=params.tau_f,
+            tau_p=params.tau_p, prune=prune, closed_form=closed_form,
+            track_frontier=expand, pull_sum_fn=pull_sum_fn)
+        return r_new, dv, dn, delta, i + 1
+
+    def cond(state):
+        *_, delta, i = state
+        return (delta > params.tau) & (i < params.max_iter)
+
+    init = (r0, dv0, dn0, jnp.asarray(jnp.inf, r0.dtype),
+            jnp.asarray(0, jnp.int32))
+    r, _, _, _, iters = jax.lax.while_loop(cond, body, init)
+    return r, iters
+
+
+@functools.partial(jax.jit, static_argnames=("params", "pull_sum_fn"))
+def nd_pagerank(dg: DeviceGraph, r_prev: jnp.ndarray,
+                params: PRParams = PRParams(), pull_sum_fn=None):
+    """Naive-dynamic: previous ranks as the initial guess, all vertices on."""
+    n = dg.n
+    on = jnp.ones((n,), jnp.bool_)
+    off = jnp.zeros((n,), jnp.bool_)
+    return _loop(dg, r_prev, on, off, params, expand=False, prune=False,
+                 closed_form=False, pull_sum_fn=pull_sum_fn)
+
+
+@functools.partial(jax.jit, static_argnames=("params", "pull_sum_fn"))
+def dt_pagerank(dg: DeviceGraph, dg_prev: DeviceGraph, r_prev: jnp.ndarray,
+                batch: DeviceBatch, params: PRParams = PRParams(),
+                pull_sum_fn=None):
+    """Dynamic Traversal (Desikan et al.): mark everything reachable from the
+    updated vertices in G^{t-1} ∪ G^t, then iterate on that frozen set."""
+    n = dg.n
+    seeds = jnp.zeros((n,), jnp.bool_)
+    seeds = seeds.at[batch.del_src].set(True, mode="drop")
+    seeds = seeds.at[batch.del_dst].set(True, mode="drop")
+    seeds = seeds.at[batch.ins_src].set(True, mode="drop")
+    seeds = seeds.at[batch.ins_dst].set(True, mode="drop")
+    affected = reach_affected(dg, seeds) | reach_affected(dg_prev, seeds)
+    off = jnp.zeros((n,), jnp.bool_)
+    return _loop(dg, r_prev, affected, off, params, expand=False, prune=False,
+                 closed_form=False, pull_sum_fn=pull_sum_fn)
+
+
+def _df_like(dg: DeviceGraph, r_prev: jnp.ndarray, batch: DeviceBatch,
+             params: PRParams, *, prune: bool, pull_sum_fn=None):
+    n = dg.n
+    dv, dn = initial_affected(n, batch.del_src, batch.del_dst, batch.ins_src)
+    dv = expand_affected(dg, dv, dn)      # paper line 9: initial expansion
+    dn0 = jnp.zeros((n,), jnp.bool_)
+    return _loop(dg, r_prev, dv, dn0, params, expand=True, prune=prune,
+                 closed_form=prune, pull_sum_fn=pull_sum_fn)
+
+
+@functools.partial(jax.jit, static_argnames=("params", "pull_sum_fn"))
+def df_pagerank(dg: DeviceGraph, r_prev: jnp.ndarray, batch: DeviceBatch,
+                params: PRParams = PRParams(), pull_sum_fn=None):
+    """Dynamic Frontier: incremental expansion, no pruning (Eq. 1 update)."""
+    return _df_like(dg, r_prev, batch, params, prune=False,
+                    pull_sum_fn=pull_sum_fn)
+
+
+@functools.partial(jax.jit, static_argnames=("params", "pull_sum_fn"))
+def dfp_pagerank(dg: DeviceGraph, r_prev: jnp.ndarray, batch: DeviceBatch,
+                 params: PRParams = PRParams(), pull_sum_fn=None):
+    """Dynamic Frontier with Pruning: expansion + pruning, closed form Eq. 2."""
+    return _df_like(dg, r_prev, batch, params, prune=True,
+                    pull_sum_fn=pull_sum_fn)

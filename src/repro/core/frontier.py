@@ -1,0 +1,67 @@
+"""Paper Alg. 5 — parallel marking of affected vertices, scatter-free.
+
+`initial_affected` is a direct translation (the paper scatters O(|Δ|) flags —
+that stays a scatter; it is tiny and batched). `expand_affected` is the TPU
+adaptation: instead of scattering each flagged vertex's out-neighbors (the
+paper's out-degree-partitioned kernel pair), every vertex *pulls* the OR of
+δ_N over its in-neighbors in G^t — the same transposed structures used for
+rank computation. Identical fixpoint, no atomics, one write per vertex.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .pagerank import DeviceGraph, pull_max
+
+__all__ = ["initial_affected", "expand_affected", "reach_affected"]
+
+
+def initial_affected(n: int, del_src: jnp.ndarray, del_dst: jnp.ndarray,
+                     ins_src: jnp.ndarray
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Alg. 5 initialAffected: δ_N[u]=1 for every updated source u; δ_V[v]=1
+    for every deletion target v. Inputs may be padded with id == n (dropped)."""
+    dv = jnp.zeros((n,), jnp.bool_)
+    dn = jnp.zeros((n,), jnp.bool_)
+    dn = dn.at[del_src].set(True, mode="drop")
+    dn = dn.at[ins_src].set(True, mode="drop")
+    dv = dv.at[del_dst].set(True, mode="drop")
+    return dv, dn
+
+
+def expand_affected(dg: DeviceGraph, dv: jnp.ndarray, dn: jnp.ndarray
+                    ) -> jnp.ndarray:
+    """δ_V'[v] = δ_V[v] OR (∃ u ∈ G^t.in(v): δ_N[u]).
+
+    NOTE: `dg` here must be the hybrid layout of the *current graph's
+    transpose* — i.e. rows are in-neighbors in G^t, which is exactly the rank
+    pull structure, so expansion re-uses it (DESIGN.md §2).
+    """
+    pulled = pull_max(dg, dn.astype(jnp.float32))
+    return dv | (pulled > 0.5)
+
+
+def reach_affected(dg: DeviceGraph, seeds: jnp.ndarray,
+                   max_steps: int | None = None) -> jnp.ndarray:
+    """Dynamic Traversal marking: all vertices reachable (along out-edges)
+    from seed vertices, via pull-based BFS fixpoint on the transpose layout.
+    Used by the DT baseline. `seeds` is a dense bool [n] mask."""
+    n = dg.n
+    max_steps = n if max_steps is None else max_steps
+
+    def body(state):
+        vis, _, i = state
+        nxt = vis | (pull_max(dg, vis.astype(jnp.float32)) > 0.5)
+        changed = jnp.any(nxt != vis)
+        return nxt, changed, i + 1
+
+    def cond(state):
+        _, changed, i = state
+        return changed & (i < max_steps)
+
+    vis, _, _ = jax.lax.while_loop(
+        cond, body, (seeds, jnp.asarray(True), jnp.asarray(0, jnp.int32)))
+    return vis

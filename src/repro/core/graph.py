@@ -1,0 +1,331 @@
+"""Host-side graph representation and dynamic-batch machinery.
+
+The paper (Sahu 2024) stores the *transpose* of the current graph G^t' in CSR on
+the GPU for pull-based rank computation, and the forward graph G^t for marking
+affected vertices. We keep both, plus a TPU-friendly hybrid layout:
+
+  * low in-degree vertices (deg <= d_p)  -> ELLPACK padded index matrix
+    (the "thread-per-vertex" side: one VPU lane per vertex), and
+  * high in-degree vertices              -> tile-padded CSR slices
+    (the "block-per-vertex" side: sequential VMEM tiles per vertex).
+
+All construction is host-side numpy (the paper likewise builds CSR on the CPU
+before copying to the device); device arrays are produced by `to_device_arrays`.
+Dead ends are eliminated by adding a self-loop to every vertex (paper §5.1.4),
+which the DF-P closed form (Eq. 2) then absorbs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import numpy as np
+
+__all__ = [
+    "Graph",
+    "HybridLayout",
+    "BatchUpdate",
+    "build_graph",
+    "add_self_loops",
+    "apply_batch",
+    "random_graph",
+    "powerlaw_graph",
+    "random_batch",
+    "temporal_stream",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Graph:
+    """Immutable CSR graph (forward) + its transpose, self-loops guaranteed.
+
+    offsets/targets   : CSR of G   (out-edges)  -- used for frontier marking.
+    t_offsets/t_sources: CSR of G' (in-edges)   -- used for rank pull.
+    """
+
+    n: int
+    offsets: np.ndarray      # [n+1] int64
+    targets: np.ndarray      # [m]   int32
+    t_offsets: np.ndarray    # [n+1] int64
+    t_sources: np.ndarray    # [m]   int32
+
+    @property
+    def m(self) -> int:
+        return int(self.targets.shape[0])
+
+    def out_degree(self) -> np.ndarray:
+        return np.diff(self.offsets).astype(np.int32)
+
+    def in_degree(self) -> np.ndarray:
+        return np.diff(self.t_offsets).astype(np.int32)
+
+    def edges(self) -> Tuple[np.ndarray, np.ndarray]:
+        src = np.repeat(np.arange(self.n, dtype=np.int32), np.diff(self.offsets))
+        return src, self.targets.copy()
+
+    def has_edge(self, u: int, v: int) -> bool:
+        lo, hi = self.offsets[u], self.offsets[u + 1]
+        return bool(np.any(self.targets[lo:hi] == v))
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchUpdate:
+    """A batch Δ^t: edge deletions (u,v) and insertions (u,v), dedup'd."""
+
+    del_src: np.ndarray  # int32 [nd]
+    del_dst: np.ndarray  # int32 [nd]
+    ins_src: np.ndarray  # int32 [ni]
+    ins_dst: np.ndarray  # int32 [ni]
+
+    @property
+    def size(self) -> int:
+        return int(self.del_src.shape[0] + self.ins_src.shape[0])
+
+
+def _csr_from_edges(n: int, src: np.ndarray, dst: np.ndarray):
+    """Build CSR from an edge list (duplicates removed); returns offsets, targets."""
+    if src.size:
+        key = src.astype(np.int64) * n + dst.astype(np.int64)
+        key = np.unique(key)
+        src = (key // n).astype(np.int32)
+        dst = (key % n).astype(np.int32)
+    counts = np.bincount(src, minlength=n).astype(np.int64)
+    offsets = np.zeros(n + 1, dtype=np.int64)
+    np.cumsum(counts, out=offsets[1:])
+    return offsets, dst.astype(np.int32), src, dst
+
+
+def build_graph(n: int, src: np.ndarray, dst: np.ndarray,
+                self_loops: bool = True) -> Graph:
+    """Construct a Graph from edge arrays; optionally augment with self-loops."""
+    src = np.asarray(src, dtype=np.int32)
+    dst = np.asarray(dst, dtype=np.int32)
+    if self_loops:
+        loops = np.arange(n, dtype=np.int32)
+        src = np.concatenate([src, loops])
+        dst = np.concatenate([dst, loops])
+    offsets, targets, usrc, udst = _csr_from_edges(n, src, dst)
+    # transpose CSR
+    t_offsets, t_sources, _, _ = _csr_from_edges(n, udst, usrc)
+    return Graph(n=n, offsets=offsets, targets=targets,
+                 t_offsets=t_offsets, t_sources=t_sources)
+
+
+def add_self_loops(n: int, src: np.ndarray, dst: np.ndarray):
+    loops = np.arange(n, dtype=np.int32)
+    return (np.concatenate([src.astype(np.int32), loops]),
+            np.concatenate([dst.astype(np.int32), loops]))
+
+
+def apply_batch(g: Graph, batch: BatchUpdate) -> Graph:
+    """Apply Δ^t to g, returning G^t (self-loops preserved — never deleted)."""
+    src, dst = g.edges()
+    if batch.del_src.size:
+        key = src.astype(np.int64) * g.n + dst.astype(np.int64)
+        dkey = batch.del_src.astype(np.int64) * g.n + batch.del_dst.astype(np.int64)
+        # never delete self-loops (paper re-adds them with every batch)
+        dkey = dkey[batch.del_src != batch.del_dst]
+        keep = ~np.isin(key, dkey)
+        src, dst = src[keep], dst[keep]
+    if batch.ins_src.size:
+        src = np.concatenate([src, batch.ins_src.astype(np.int32)])
+        dst = np.concatenate([dst, batch.ins_dst.astype(np.int32)])
+    return build_graph(g.n, src, dst, self_loops=True)
+
+
+# ---------------------------------------------------------------------------
+# Hybrid ELL + tiled-CSR device layout (the paper's two-kernel partition)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class HybridLayout:
+    """Device-friendly pull layout for the transpose graph G'.
+
+    ELL side (low in-degree, deg <= d_p):
+      ell_idx  [n, d_p] int32 : in-neighbor ids, padded with 0
+      ell_mask [n, d_p] f32   : 1.0 for real edges, 0.0 for padding
+      (rows of high-degree vertices are all-padding; they are masked out by
+       `is_low` so storage is wasted but shapes stay static across snapshots)
+    CSR side (high in-degree), tile-padded to `tile` edges:
+      hi_ids    [n_hi_cap]      int32 : vertex id per high vertex (pad = n)
+      hi_tiles  [t_cap, tile]   int32 : in-neighbor ids, tiles padded with 0
+      hi_tmask  [t_cap, tile]   f32   : edge validity
+      hi_rowmap [t_cap]         int32 : which *high-slot* each tile belongs to
+    Common:
+      is_low   [n] bool ; out_deg [n] int32 (of G, for contributions)
+      perm     [n] int32 : partition order, low-degree vertices first (Alg. 4)
+      n_low    int
+    """
+
+    d_p: int
+    tile: int
+    ell_idx: np.ndarray
+    ell_mask: np.ndarray
+    hi_ids: np.ndarray
+    hi_tiles: np.ndarray
+    hi_tmask: np.ndarray
+    hi_rowmap: np.ndarray
+    is_low: np.ndarray
+    out_deg: np.ndarray
+    perm: np.ndarray
+    n_low: int
+
+    @property
+    def n(self) -> int:
+        return int(self.is_low.shape[0])
+
+    @property
+    def n_hi_cap(self) -> int:
+        return int(self.hi_ids.shape[0])
+
+
+def build_hybrid(g: Graph, d_p: int = 64, tile: int = 1024,
+                 n_hi_cap: Optional[int] = None,
+                 t_cap: Optional[int] = None) -> HybridLayout:
+    """Partition vertices by in-degree (Alg. 4) and build the hybrid layout.
+
+    `n_hi_cap` / `t_cap` allow fixed capacities across dynamic snapshots so the
+    jitted update never recompiles; they default to the exact current sizes.
+    """
+    from .partition import partition_by_degree
+
+    indeg = g.in_degree()
+    perm, n_low = partition_by_degree(indeg, d_p)
+    is_low = indeg <= d_p
+    n = g.n
+
+    # --- ELL side ---------------------------------------------------------
+    ell_idx = np.zeros((n, d_p), dtype=np.int32)
+    ell_mask = np.zeros((n, d_p), dtype=np.float32)
+    low = np.nonzero(is_low)[0]
+    if low.size:
+        deg_low = indeg[low]
+        # vectorized ragged fill
+        rows = np.repeat(low, deg_low)
+        pos = np.concatenate([np.arange(d, dtype=np.int64) for d in deg_low]) \
+            if low.size else np.zeros(0, np.int64)
+        starts = g.t_offsets[low]
+        flat = np.concatenate([g.t_sources[s:s + d]
+                               for s, d in zip(starts, deg_low)]) \
+            if low.size else np.zeros(0, np.int32)
+        ell_idx[rows, pos] = flat
+        ell_mask[rows, pos] = 1.0
+
+    # --- tiled CSR side ----------------------------------------------------
+    hi = np.nonzero(~is_low)[0].astype(np.int32)
+    n_hi = int(hi.size)
+    if n_hi_cap is None:
+        n_hi_cap = max(n_hi, 1)
+    assert n_hi <= n_hi_cap, "n_hi_cap too small for this snapshot"
+    tiles = []
+    tmasks = []
+    rowmap = []
+    for slot, v in enumerate(hi):
+        lo_, hi_ = g.t_offsets[v], g.t_offsets[v + 1]
+        nbr = g.t_sources[lo_:hi_]
+        nt = (nbr.size + tile - 1) // tile
+        pad = nt * tile - nbr.size
+        padded = np.concatenate([nbr, np.zeros(pad, np.int32)])
+        mask = np.concatenate([np.ones(nbr.size, np.float32),
+                               np.zeros(pad, np.float32)])
+        tiles.append(padded.reshape(nt, tile))
+        tmasks.append(mask.reshape(nt, tile))
+        rowmap.extend([slot] * nt)
+    nt_total = len(rowmap)
+    if t_cap is None:
+        t_cap = max(nt_total, 1)
+    assert nt_total <= t_cap, "t_cap too small for this snapshot"
+    hi_tiles = np.zeros((t_cap, tile), dtype=np.int32)
+    hi_tmask = np.zeros((t_cap, tile), dtype=np.float32)
+    if nt_total:
+        hi_tiles[:nt_total] = np.concatenate(tiles, axis=0)
+        hi_tmask[:nt_total] = np.concatenate(tmasks, axis=0)
+    hi_rowmap = np.full(t_cap, n_hi_cap - 1, dtype=np.int32)  # pad tiles -> last slot, mask=0
+    hi_rowmap[:nt_total] = np.asarray(rowmap, dtype=np.int32) if nt_total else hi_rowmap[:0]
+    hi_ids = np.full(n_hi_cap, n, dtype=np.int32)  # sentinel n = "no vertex"
+    hi_ids[:n_hi] = hi
+
+    return HybridLayout(
+        d_p=d_p, tile=tile, ell_idx=ell_idx, ell_mask=ell_mask,
+        hi_ids=hi_ids, hi_tiles=hi_tiles, hi_tmask=hi_tmask,
+        hi_rowmap=hi_rowmap, is_low=is_low, out_deg=g.out_degree(),
+        perm=perm, n_low=int(n_low))
+
+
+# ---------------------------------------------------------------------------
+# Synthetic graph + batch generators (paper §5.1.3/5.1.4 protocol, scaled down)
+# ---------------------------------------------------------------------------
+
+def random_graph(n: int, m: int, seed: int = 0) -> Graph:
+    """Uniform random directed graph with self-loops."""
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n, size=m, dtype=np.int64).astype(np.int32)
+    dst = rng.integers(0, n, size=m, dtype=np.int64).astype(np.int32)
+    return build_graph(n, src, dst, self_loops=True)
+
+
+def powerlaw_graph(n: int, m: int, alpha: float = 2.1, seed: int = 0) -> Graph:
+    """Power-law in-degree graph (Zipf targets) — exercises the high/low split."""
+    rng = np.random.default_rng(seed)
+    # Zipf-ranked popularity for *targets* => skewed in-degree
+    ranks = np.arange(1, n + 1, dtype=np.float64)
+    p = ranks ** (-alpha)
+    p /= p.sum()
+    dst = rng.choice(n, size=m, p=p).astype(np.int32)
+    src = rng.integers(0, n, size=m, dtype=np.int64).astype(np.int32)
+    return build_graph(n, src, dst, self_loops=True)
+
+
+def random_batch(g: Graph, frac: float, insert_frac: float = 0.8,
+                 seed: int = 0) -> BatchUpdate:
+    """Paper §5.1.4: batch of size frac*|E|, 80% insertions / 20% deletions.
+
+    Insertions pick uniform vertex pairs; deletions sample existing edges
+    uniformly. No vertices are added/removed. Self-loops survive deletion.
+    """
+    rng = np.random.default_rng(seed)
+    b = max(1, int(round(frac * g.m)))
+    ni = int(round(b * insert_frac))
+    nd = b - ni
+    ins_src = rng.integers(0, g.n, size=ni).astype(np.int32)
+    ins_dst = rng.integers(0, g.n, size=ni).astype(np.int32)
+    src, dst = g.edges()
+    if nd > 0 and g.m > 0:
+        pick = rng.integers(0, g.m, size=nd)
+        del_src, del_dst = src[pick], dst[pick]
+        nonloop = del_src != del_dst
+        del_src, del_dst = del_src[nonloop], del_dst[nonloop]
+    else:
+        del_src = del_dst = np.zeros(0, np.int32)
+    return BatchUpdate(del_src=del_src, del_dst=del_dst,
+                       ins_src=ins_src, ins_dst=ins_dst)
+
+
+def temporal_stream(n: int, n_edges: int, n_batches: int, warm_frac: float = 0.9,
+                    seed: int = 0):
+    """Emulate the real-world-dynamic protocol: preferential-attachment-ish
+    temporal edge stream; load `warm_frac` as the base graph, then yield
+    `n_batches` insertion-only batches of the remainder (paper §5.1.4).
+
+    Returns (base_graph, [BatchUpdate...]).
+    """
+    rng = np.random.default_rng(seed)
+    # growing-popularity stream: later edges prefer earlier vertices (Zipf)
+    ranks = np.arange(1, n + 1, dtype=np.float64) ** -1.5
+    p = ranks / ranks.sum()
+    src = rng.choice(n, size=n_edges, p=p).astype(np.int32)
+    dst = rng.choice(n, size=n_edges, p=p).astype(np.int32)
+    warm = int(n_edges * warm_frac)
+    base = build_graph(n, src[:warm], dst[:warm], self_loops=True)
+    rest = n_edges - warm
+    per = max(1, rest // n_batches)
+    batches = []
+    for k in range(n_batches):
+        lo = warm + k * per
+        hi = min(warm + (k + 1) * per, n_edges)
+        if lo >= hi:
+            break
+        batches.append(BatchUpdate(
+            del_src=np.zeros(0, np.int32), del_dst=np.zeros(0, np.int32),
+            ins_src=src[lo:hi], ins_dst=dst[lo:hi]))
+    return base, batches

@@ -1,0 +1,196 @@
+"""Static PageRank (paper Alg. 1) — synchronous, pull-based, scatter-free.
+
+The device graph is the hybrid ELL + tiled-CSR layout of the *transpose* graph
+(see core/graph.py). Rank computation is one gather-reduce per iteration with a
+single masked write per vertex — the TPU translation of the paper's
+atomics-free pull kernels. Low in-degree vertices ride the ELL (lane-per-vertex)
+path; high in-degree vertices ride the tiled-CSR (tile-loop-per-vertex) path,
+combined with a segment-sum that plays the role of the block reduction.
+
+`update_ranks` is shared verbatim between Static / ND / DT / DF / DF-P (the
+paper re-uses `updateRanks()` the same way, toggling the affected flags).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .graph import Graph, HybridLayout, build_hybrid
+
+__all__ = [
+    "DeviceGraph", "to_device", "pull_sum", "pull_max", "update_ranks",
+    "static_pagerank", "PRParams", "init_ranks",
+]
+
+ALPHA = 0.85
+TAU = 1e-10
+TAU_F = 1e-6
+TAU_P = 1e-6
+MAX_ITER = 500
+
+
+class DeviceGraph(NamedTuple):
+    """Hybrid pull layout staged on device (all jnp arrays, static shapes)."""
+    ell_idx: jnp.ndarray    # [n, d_p] int32
+    ell_mask: jnp.ndarray   # [n, d_p] f32
+    hi_ids: jnp.ndarray     # [n_hi_cap] int32 (sentinel = n)
+    hi_tiles: jnp.ndarray   # [t_cap, tile] int32
+    hi_tmask: jnp.ndarray   # [t_cap, tile] f32
+    hi_rowmap: jnp.ndarray  # [t_cap] int32
+    is_low: jnp.ndarray     # [n] bool
+    out_deg: jnp.ndarray    # [n] int32 (>=1: self-loops guaranteed)
+
+    @property
+    def n(self) -> int:
+        return self.is_low.shape[0]
+
+    @property
+    def n_hi_cap(self) -> int:
+        return self.hi_ids.shape[0]
+
+
+class PRParams(NamedTuple):
+    alpha: float = ALPHA
+    tau: float = TAU
+    tau_f: float = TAU_F
+    tau_p: float = TAU_P
+    max_iter: int = MAX_ITER
+
+
+def to_device(layout: HybridLayout) -> DeviceGraph:
+    return DeviceGraph(
+        ell_idx=jnp.asarray(layout.ell_idx),
+        ell_mask=jnp.asarray(layout.ell_mask),
+        hi_ids=jnp.asarray(layout.hi_ids),
+        hi_tiles=jnp.asarray(layout.hi_tiles),
+        hi_tmask=jnp.asarray(layout.hi_tmask),
+        hi_rowmap=jnp.asarray(layout.hi_rowmap),
+        is_low=jnp.asarray(layout.is_low),
+        out_deg=jnp.asarray(layout.out_deg),
+    )
+
+
+def device_graph(g: Graph, d_p: int = 64, tile: int = 1024, **caps) -> DeviceGraph:
+    return to_device(build_hybrid(g, d_p=d_p, tile=tile, **caps))
+
+
+def init_ranks(n: int, dtype=jnp.float64) -> jnp.ndarray:
+    dtype = jnp.zeros(0, dtype).dtype  # canonicalize under x64-disabled
+    return jnp.full((n,), 1.0 / n, dtype=dtype)
+
+
+# ---------------------------------------------------------------------------
+# Pull primitives (single gather-reduce; one write per vertex)
+# ---------------------------------------------------------------------------
+
+def pull_sum(dg: DeviceGraph, c: jnp.ndarray) -> jnp.ndarray:
+    """sum_{u in G'.row(v)} c[u] for every v — the paper's two rank kernels.
+
+    ELL side: [n, d_p] masked gather + row-sum (lane-per-vertex).
+    CSR side: [t_cap, tile] masked gather + tile-sum + segment-sum over the
+    tile->row map (tile-loop-per-vertex with an on-chip accumulator on TPU),
+    scattered once into the dense result (drop-mode handles pad sentinel).
+    """
+    dt = c.dtype
+    low = jnp.sum(jnp.take(c, dg.ell_idx, axis=0) * dg.ell_mask.astype(dt), axis=1)
+    tile_sums = jnp.sum(jnp.take(c, dg.hi_tiles, axis=0) * dg.hi_tmask.astype(dt), axis=1)
+    hi_per_slot = jax.ops.segment_sum(tile_sums, dg.hi_rowmap,
+                                      num_segments=dg.n_hi_cap)
+    out = low  # high-degree ELL rows are all-padding => contribute 0 here
+    out = out.at[dg.hi_ids].add(hi_per_slot, mode="drop")
+    return out
+
+
+def pull_max(dg: DeviceGraph, x: jnp.ndarray) -> jnp.ndarray:
+    """max_{u in G'.row(v)} x[u] — pull-based frontier expansion primitive.
+
+    Replaces the paper's scatter-based `expandAffected` kernel pair (TPU has no
+    cheap scatter); same fixpoint, same schedule, scatter-free.
+    """
+    dt = x.dtype
+    low = jnp.max(jnp.take(x, dg.ell_idx, axis=0) * dg.ell_mask.astype(dt),
+                  axis=1, initial=0)   # initial: d_p may be 0 ("one format")
+    tile_max = jnp.max(jnp.take(x, dg.hi_tiles, axis=0)
+                       * dg.hi_tmask.astype(dt), axis=1, initial=0)
+    hi_per_slot = jax.ops.segment_max(tile_max, dg.hi_rowmap,
+                                      num_segments=dg.n_hi_cap)
+    hi_per_slot = jnp.maximum(hi_per_slot, 0)  # empty segments -> -inf guard
+    out = jnp.zeros_like(low).at[dg.hi_ids].max(hi_per_slot, mode="drop")
+    return jnp.maximum(low, out)
+
+
+# ---------------------------------------------------------------------------
+# updateRanks (paper Alg. 3) — shared across all five approaches
+# ---------------------------------------------------------------------------
+
+def update_ranks(dg: DeviceGraph, r: jnp.ndarray, affected: jnp.ndarray,
+                 *, alpha: float, tau_f: float, tau_p: float,
+                 prune: bool, closed_form: bool, track_frontier: bool,
+                 pull_sum_fn=None
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One synchronous rank sweep.
+
+    Returns (r_new, affected', delta_N, linf_delta). With `affected` all-True,
+    `prune=False`, `closed_form=False`, `track_frontier=False` this *is* the
+    static kernel (paper: "disable the affected flags to utilize the same
+    function for Static PageRank").
+    """
+    psum = pull_sum_fn or pull_sum
+    dt = r.dtype
+    n = dg.n
+    d = dg.out_deg.astype(dt)
+    c0 = jnp.asarray((1.0 - alpha) / n, dt)
+    c = r / d
+    s = psum(dg, c)
+    if closed_form:
+        # Eq. 2: absorb the guaranteed self-loop analytically
+        k = s - r / d
+        rv = (c0 + alpha * k) / (1.0 - alpha / d)
+    else:
+        rv = c0 + alpha * s
+    r_new = jnp.where(affected, rv, r)
+    dr = jnp.abs(r_new - r)
+    rel = dr / jnp.maximum(r_new, r)
+    if prune:
+        affected = affected & ~(rel <= tau_p)
+    if track_frontier:
+        # rel == 0 for unaffected vertices (r_new == r there), so this matches
+        # the paper's "if affected and Δr/max(r,R[v]) > τ_f" exactly.
+        delta_n = rel > tau_f
+    else:
+        delta_n = jnp.zeros((n,), dtype=jnp.bool_)
+    return r_new, affected, delta_n, jnp.max(dr)
+
+
+# ---------------------------------------------------------------------------
+# Static PageRank driver (paper Alg. 1)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("params", "pull_sum_fn"))
+def static_pagerank(dg: DeviceGraph, r0: jnp.ndarray,
+                    params: PRParams = PRParams(),
+                    pull_sum_fn=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Power iteration to L-inf tolerance. Returns (ranks, n_iters)."""
+    n = dg.n
+    all_on = jnp.ones((n,), dtype=jnp.bool_)
+
+    def body(state):
+        r, _, i = state
+        r_new, _, _, delta = update_ranks(
+            dg, r, all_on, alpha=params.alpha, tau_f=params.tau_f,
+            tau_p=params.tau_p, prune=False, closed_form=False,
+            track_frontier=False, pull_sum_fn=pull_sum_fn)
+        return r_new, delta, i + 1
+
+    def cond(state):
+        _, delta, i = state
+        return (delta > params.tau) & (i < params.max_iter)
+
+    r0 = r0.astype(r0.dtype)
+    init = (r0, jnp.asarray(jnp.inf, r0.dtype), jnp.asarray(0, jnp.int32))
+    r, _, iters = jax.lax.while_loop(cond, body, init)
+    return r, iters

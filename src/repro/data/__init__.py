@@ -1,0 +1,2 @@
+from .pipeline import SyntheticLM, PackedFile, batch_for
+__all__ = ["SyntheticLM", "PackedFile", "batch_for"]

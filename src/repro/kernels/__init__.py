@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the paper's compute hot spots.
+
+Each kernel ships with a pure-jnp oracle in ref.py; tests sweep shapes and
+dtypes in interpret mode (this container is CPU-only; TPU is the target).
+"""
+from .ell_pull import ell_pull
+from .csr_block import csr_block_pull
+from .pr_update import pr_update
+from .linf_delta import linf_delta
+from .flash_attn import flash_attention
+from .ops import pull_sum_kernels, update_ranks_kernel, default_interpret
+
+__all__ = ["ell_pull", "csr_block_pull", "pr_update", "linf_delta",
+           "pull_sum_kernels", "update_ranks_kernel", "default_interpret",
+           "flash_attention"]

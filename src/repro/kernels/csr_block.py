@@ -1,0 +1,79 @@
+"""Pallas TPU kernel: tiled-CSR pull for high in-degree vertices
+(the paper's block-per-vertex kernel with shared-memory reduction).
+
+Each high-degree vertex's in-edge list is padded to whole tiles of ``tile``
+edges (host-side, graph.py). The kernel walks the sequential TPU grid over
+tiles; a scalar-prefetched tile→row map (SMEM) tells each step which output
+slot to accumulate into — the VMEM-resident output block plays the role of
+the CUDA shared-memory accumulator, and grid sequentiality replaces the block
+reduction (no atomics, exactly one read-modify-write per tile).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["csr_block_pull"]
+
+
+def _kernel(rowmap_ref, c_ref, tiles_ref, tmask_ref, out_ref):
+    t = pl.program_id(0)
+
+    @pl.when(t == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    c = c_ref[...]
+    idx = tiles_ref[0]                           # [tile]
+    mask = tmask_ref[0].astype(c.dtype)
+    s = jnp.sum(jnp.take(c, idx, axis=0) * mask)
+    row = rowmap_ref[t]
+    out_ref[pl.ds(row, 1)] = out_ref[pl.ds(row, 1)] + s
+
+
+def csr_block_pull(c: jnp.ndarray, hi_tiles: jnp.ndarray,
+                   hi_tmask: jnp.ndarray, hi_rowmap: jnp.ndarray,
+                   n_rows: int, *, interpret: bool = True) -> jnp.ndarray:
+    """out[hi_rowmap[t]] += sum(c[hi_tiles[t]] * hi_tmask[t]) for each tile t.
+
+    Returns per-high-slot sums, shape [n_rows].
+    """
+    t_cap, tile = hi_tiles.shape
+    grid = (t_cap,)
+    try:
+        from jax.experimental.pallas import tpu as pltpu
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec(c.shape, lambda t, rm: (0,)),
+                pl.BlockSpec((1, tile), lambda t, rm: (t, 0)),
+                pl.BlockSpec((1, tile), lambda t, rm: (t, 0)),
+            ],
+            out_specs=pl.BlockSpec((n_rows,), lambda t, rm: (0,)),
+        )
+        return pl.pallas_call(
+            _kernel,
+            grid_spec=grid_spec,
+            out_shape=jax.ShapeDtypeStruct((n_rows,), c.dtype),
+            interpret=interpret,
+        )(hi_rowmap, c, hi_tiles, hi_tmask)
+    except (ImportError, AttributeError):
+        # Fallback spelling for pallas versions without PrefetchScalarGridSpec
+        def _kernel2(rowmap_ref, c_ref, tiles_ref, tmask_ref, out_ref):
+            _kernel(rowmap_ref, c_ref, tiles_ref, tmask_ref, out_ref)
+
+        return pl.pallas_call(
+            _kernel2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec(hi_rowmap.shape, lambda t: (0,)),
+                pl.BlockSpec(c.shape, lambda t: (0,)),
+                pl.BlockSpec((1, tile), lambda t: (t, 0)),
+                pl.BlockSpec((1, tile), lambda t: (t, 0)),
+            ],
+            out_specs=pl.BlockSpec((n_rows,), lambda t: (0,)),
+            out_shape=jax.ShapeDtypeStruct((n_rows,), c.dtype),
+            interpret=interpret,
+        )(hi_rowmap, c, hi_tiles, hi_tmask)

@@ -1,0 +1,56 @@
+"""Pallas TPU kernel: lane-per-vertex ELL pull (paper's thread-per-vertex kernel).
+
+Low in-degree vertices are packed into a dense padded index matrix
+``ell_idx [n, d_p]``; each kernel instance owns a tile of ``vt`` vertices and
+computes a masked gather + row-sum with the contribution vector ``c`` held
+resident in VMEM (valid for |V| up to ~2M at f32 — above that, use the
+gather-outside path in ``pr_update``; see DESIGN.md §2 "gather locality").
+
+The VPU sees fully regular work: ``vt`` rows × ``d_p`` lanes, no divergence —
+the TPU translation of the paper's low-degree kernel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["ell_pull"]
+
+
+def _kernel(c_ref, idx_ref, mask_ref, out_ref):
+    c = c_ref[...]
+    idx = idx_ref[...]
+    mask = mask_ref[...]
+    gathered = jnp.take(c, idx, axis=0)          # [vt, d_p] vector gather
+    out_ref[...] = jnp.sum(gathered * mask.astype(c.dtype), axis=1)
+
+
+def ell_pull(c: jnp.ndarray, ell_idx: jnp.ndarray, ell_mask: jnp.ndarray,
+             *, vt: int = 512, interpret: bool = True) -> jnp.ndarray:
+    """out[v] = sum_j c[ell_idx[v, j]] * ell_mask[v, j].
+
+    c: [n] f32/f64 ; ell_idx/ell_mask: [nv, d_p]. nv is padded to vt.
+    """
+    nv, d_p = ell_idx.shape
+    pad = (-nv) % vt
+    if pad:
+        ell_idx = jnp.pad(ell_idx, ((0, pad), (0, 0)))
+        ell_mask = jnp.pad(ell_mask, ((0, pad), (0, 0)))
+    npad = nv + pad
+    grid = (npad // vt,)
+    out = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(c.shape, lambda i: (0,)),            # c resident
+            pl.BlockSpec((vt, d_p), lambda i: (i, 0)),
+            pl.BlockSpec((vt, d_p), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((vt,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((npad,), c.dtype),
+        interpret=interpret,
+    )(c, ell_idx, ell_mask)
+    return out[:nv]

@@ -1,0 +1,99 @@
+"""Pallas TPU kernel: causal flash attention (online-softmax blocking).
+
+The LM substrate's chunked-attention schedule (models/attention.py) is the
+jnp expression of this kernel; this is the Mosaic-tiled version for real TPU
+deployment, validated in interpret mode against ref.py's exact softmax.
+
+Grid: (BH, nq, nk) with the kv axis innermost (sequential on TPU). Running
+max / denominator / accumulator live in VMEM scratch across kv steps; the
+output block is written once on the last kv step (one write per q tile —
+the same discipline as the PageRank kernels). Causal masking prunes nothing
+structurally (full rectangle, masked), matching the jnp schedule so the
+roofline accounting stays consistent; block sizes default to MXU-friendly
+(128, 128).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:
+    from jax.experimental.pallas import tpu as pltpu
+    _VMEM = pltpu.VMEM
+except Exception:  # pragma: no cover
+    _VMEM = None
+
+__all__ = ["flash_attention"]
+
+NEG = -2.0 ** 30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_s, l_s, acc_s, *, scale, bq, bk,
+            nk, causal):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_s[...] = jnp.full_like(m_s, NEG)
+        l_s[...] = jnp.zeros_like(l_s)
+        acc_s[...] = jnp.zeros_like(acc_s)
+
+    q = q_ref[0].astype(jnp.float32)                  # [bq, D]
+    k = k_ref[0].astype(jnp.float32)                  # [bk, D]
+    v = v_ref[0].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if causal:
+        qpos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        s = jnp.where(kpos <= qpos, s, NEG)
+    m_prev = m_s[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_s[...] = l_s[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+    acc_s[...] = acc_s[...] * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_s[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _fin():
+        o_ref[0] = (acc_s[...] / jnp.maximum(l_s[...], 1e-30)
+                    ).astype(o_ref.dtype)
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    bq: int = 128, bk: int = 128, causal: bool = True,
+                    interpret: bool = True) -> jnp.ndarray:
+    """q [BH, S, D], k/v [BH, T, D] (GQA: repeat kv heads before the call).
+    Returns [BH, S, D]."""
+    BH, S, D = q.shape
+    T = k.shape[1]
+    bq = min(bq, S)
+    bk = min(bk, T)
+    assert S % bq == 0 and T % bk == 0, (S, bq, T, bk)
+    nq, nk = S // bq, T // bk
+    scale = 1.0 / math.sqrt(D)
+    kern = functools.partial(_kernel, scale=scale, bq=bq, bk=bk, nk=nk,
+                             causal=causal)
+    scratch = ([_VMEM((bq, 1), jnp.float32), _VMEM((bq, 1), jnp.float32),
+                _VMEM((bq, D), jnp.float32)] if _VMEM is not None else
+               [pl.ANY] * 3)
+    return pl.pallas_call(
+        kern,
+        grid=(BH, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, D), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, D), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, D), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, D), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, D), q.dtype),
+        scratch_shapes=scratch,
+        interpret=interpret,
+    )(q, k, v)

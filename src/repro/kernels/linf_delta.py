@@ -1,0 +1,48 @@
+"""Pallas TPU kernel pair: L∞-norm of a rank difference (paper's convergence
+detection). Stage 1: per-tile partial max of |a - b| across the grid.
+Stage 2: single-program reduction of the partials buffer. Mirrors the paper's
+two-kernel design (block partials -> final reduce -> scalar to host)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["linf_delta"]
+
+
+def _stage1(a_ref, b_ref, out_ref):
+    out_ref[0] = jnp.max(jnp.abs(a_ref[...] - b_ref[...]))
+
+
+def _stage2(p_ref, out_ref):
+    out_ref[0] = jnp.max(p_ref[...])
+
+
+def linf_delta(a: jnp.ndarray, b: jnp.ndarray, *, vt: int = 2048,
+               interpret: bool = True) -> jnp.ndarray:
+    n = a.shape[0]
+    pad = (-n) % vt
+    if pad:
+        a = jnp.pad(a, (0, pad))
+        b = jnp.pad(b, (0, pad))
+    npad = n + pad
+    grid = (npad // vt,)
+    partials = pl.pallas_call(
+        _stage1,
+        grid=grid,
+        in_specs=[pl.BlockSpec((vt,), lambda i: (i,)),
+                  pl.BlockSpec((vt,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((1,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((grid[0],), a.dtype),
+        interpret=interpret,
+    )(a, b)
+    out = pl.pallas_call(
+        _stage2,
+        grid=(1,),
+        in_specs=[pl.BlockSpec(partials.shape, lambda i: (0,))],
+        out_specs=pl.BlockSpec((1,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((1,), a.dtype),
+        interpret=interpret,
+    )(partials)
+    return out[0]

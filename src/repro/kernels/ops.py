@@ -1,0 +1,56 @@
+"""Jit'd wrappers binding the Pallas kernels to the core engine.
+
+``pull_sum_kernels(dg, c)`` is a drop-in ``pull_sum_fn`` for
+``core.pagerank``/``core.dynamic``: ELL side via the lane-per-vertex kernel,
+high-degree side via the tiled-CSR kernel. ``interpret`` defaults to True on
+CPU (this container) and False on TPU, where the kernels compile via Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .csr_block import csr_block_pull
+from .ell_pull import ell_pull
+from .linf_delta import linf_delta
+from .pr_update import pr_update
+
+__all__ = ["default_interpret", "pull_sum_kernels", "update_ranks_kernel",
+           "linf_delta", "pr_update", "ell_pull", "csr_block_pull"]
+
+
+def default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def pull_sum_kernels(dg, c: jnp.ndarray, *, vt: int = 512,
+                     interpret: bool | None = None) -> jnp.ndarray:
+    """Kernel-backed pull_sum over the hybrid layout (cf. core.pagerank.pull_sum)."""
+    interpret = default_interpret() if interpret is None else interpret
+    low = ell_pull(c, dg.ell_idx, dg.ell_mask, vt=vt, interpret=interpret)
+    hi = csr_block_pull(c, dg.hi_tiles, dg.hi_tmask, dg.hi_rowmap,
+                        dg.n_hi_cap, interpret=interpret)
+    return low.at[dg.hi_ids].add(hi, mode="drop")
+
+
+def update_ranks_kernel(dg, r: jnp.ndarray, affected: jnp.ndarray, *,
+                        alpha: float, tau_f: float, tau_p: float,
+                        prune: bool, closed_form: bool, track_frontier: bool,
+                        interpret: bool | None = None):
+    """Kernel-backed Alg. 3 body: kernel pull + fused pr_update.
+
+    Same contract as core.pagerank.update_ranks.
+    """
+    interpret = default_interpret() if interpret is None else interpret
+    d = dg.out_deg.astype(r.dtype)
+    c = r / d
+    contrib = pull_sum_kernels(dg, c, interpret=interpret)
+    r_new, aff_new, dn, dmax = pr_update(
+        contrib, r, dg.out_deg, affected.astype(r.dtype), alpha=alpha,
+        tau_f=tau_f, tau_p=tau_p, prune=prune, closed_form=closed_form,
+        interpret=interpret)
+    aff_out = aff_new > 0 if prune else affected
+    dn_out = (dn > 0) if track_frontier else jnp.zeros_like(affected)
+    return r_new, aff_out, dn_out, dmax

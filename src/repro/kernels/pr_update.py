@@ -1,0 +1,87 @@
+"""Pallas TPU kernel: fused ``updateRanks`` (paper Alg. 3 body).
+
+Fuses, in one VMEM pass per vertex tile:
+  rank formula (Eq. 1 or the self-loop closed form Eq. 2) -> masked write
+  + |Δr| tile-partials for the L∞ convergence norm (paper's norm kernel 1)
+  + DF-P pruning of the affected set (τ_p)
+  + frontier flagging δ_N (τ_f)
+
+On the GPU these are 3-4 passes (update kernel pair + norm kernel pair +
+flag updates); here a single kernel emits all five outputs — one write per
+vertex per output, atomics-free (see EXPERIMENTS.md §Perf for the fusion
+accounting). The in-neighbor reduction itself arrives pre-reduced in
+``contrib`` (from ell_pull/csr_block_pull or the XLA gather path).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["pr_update"]
+
+
+def _kernel(contrib_ref, r_ref, deg_ref, aff_ref,
+            rnew_ref, affnew_ref, dn_ref, pmax_ref,
+            *, alpha, inv_n, tau_f, tau_p, prune, closed_form):
+    r = r_ref[...]
+    dt = r.dtype
+    contrib = contrib_ref[...]
+    d = deg_ref[...].astype(dt)
+    aff = aff_ref[...] > 0
+    c0 = jnp.asarray((1.0 - alpha) * inv_n, dt)
+    if closed_form:
+        rv = (c0 + alpha * (contrib - r / d)) / (1.0 - alpha / d)
+    else:
+        rv = c0 + alpha * contrib
+    r_new = jnp.where(aff, rv, r)
+    dr = jnp.abs(r_new - r)
+    rel = dr / jnp.maximum(r_new, r)
+    if prune:
+        aff = aff & ~(rel <= tau_p)
+    rnew_ref[...] = r_new
+    affnew_ref[...] = aff.astype(affnew_ref.dtype)
+    dn_ref[...] = (rel > tau_f).astype(dn_ref.dtype)
+    pmax_ref[0] = jnp.max(dr)
+
+
+def pr_update(contrib: jnp.ndarray, r: jnp.ndarray, out_deg: jnp.ndarray,
+              affected: jnp.ndarray, *, alpha: float = 0.85,
+              inv_n: float | None = None, tau_f: float = 1e-6,
+              tau_p: float = 1e-6, prune: bool = True,
+              closed_form: bool = True, vt: int = 1024,
+              interpret: bool = True):
+    """Returns (r_new, affected', delta_n, linf_dr). affected is {0,1} f32."""
+    n = r.shape[0]
+    inv_n = 1.0 / n if inv_n is None else inv_n
+    pad = (-n) % vt
+    if pad:
+        contrib = jnp.pad(contrib, (0, pad))
+        r = jnp.pad(r, (0, pad), constant_values=1.0)  # rel=0 on padding
+        out_deg = jnp.pad(out_deg, (0, pad), constant_values=1)
+        affected = jnp.pad(affected, (0, pad))
+    npad = n + pad
+    grid = (npad // vt,)
+    kern = functools.partial(_kernel, alpha=alpha, inv_n=inv_n, tau_f=tau_f,
+                             tau_p=tau_p, prune=prune, closed_form=closed_form)
+    r_new, aff_new, dn, pmax = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[pl.BlockSpec((vt,), lambda i: (i,))] * 4,
+        out_specs=[
+            pl.BlockSpec((vt,), lambda i: (i,)),
+            pl.BlockSpec((vt,), lambda i: (i,)),
+            pl.BlockSpec((vt,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((npad,), r.dtype),
+            jax.ShapeDtypeStruct((npad,), affected.dtype),
+            jax.ShapeDtypeStruct((npad,), affected.dtype),
+            jax.ShapeDtypeStruct((grid[0],), r.dtype),
+        ],
+        interpret=interpret,
+    )(contrib, r, out_deg.astype(r.dtype), affected)
+    return r_new[:n], aff_new[:n], dn[:n], jnp.max(pmax)

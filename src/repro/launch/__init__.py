@@ -1,0 +1,2 @@
+from .mesh import make_production_mesh, make_local_mesh, HW
+__all__ = ["make_production_mesh", "make_local_mesh", "HW"]

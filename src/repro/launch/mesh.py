@@ -1,0 +1,39 @@
+"""Production mesh construction.
+
+Single pod: (16, 16) -> ('data', 'model')   [256 chips, v5e]
+Multi-pod:  (2, 16, 16) -> ('pod', 'data', 'model')  [512 chips]
+
+A FUNCTION, not a module constant — importing this module never touches jax
+device state (the dry-run forces 512 host devices before first jax init; the
+rest of the framework must see the real topology).
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_local_mesh", "HW"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_local_mesh(model_parallel: int = 1):
+    """Whatever devices exist locally, split (data, model). For CPU smoke
+    runs this is (1, 1)."""
+    n = len(jax.devices())
+    assert n % model_parallel == 0
+    return jax.make_mesh((n // model_parallel, model_parallel),
+                         ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+class HW:
+    """TPU v5e per-chip constants used by the roofline analysis."""
+    PEAK_FLOPS = 197e12        # bf16
+    HBM_BW = 819e9             # bytes/s
+    ICI_BW = 50e9              # bytes/s per link
+    HBM_BYTES = 16e9

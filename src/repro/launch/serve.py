@@ -1,0 +1,76 @@
+"""Serving launcher: prefill a batch of prompts, then batched greedy decode.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --smoke \
+      --batch 4 --prompt-len 32 --gen 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import get_config, smoke_config
+from ..data.pipeline import batch_for
+from ..models import LMModel
+from ..models import transformer as tfm
+from .mesh import make_local_mesh
+
+
+def serve(cfg, *, batch: int, prompt_len: int, gen: int, mesh=None, seed=0):
+    """Returns (generated tokens [B, gen], tokens/sec)."""
+    model = LMModel(cfg, mesh=mesh)
+    params = model.init_params(jax.random.key(seed))
+    prompts = batch_for(cfg, batch, prompt_len, 0, seed)
+    total = prompt_len + gen
+    cache = tfm.init_cache(cfg, batch, total)
+    decode = jax.jit(model.decode_step, donate_argnums=(1,))
+
+    # prefill by stepping (correct for every cache kind incl. recurrent; a
+    # fused full-sequence prefill writes the same cache — launch/dryrun
+    # lowers that path; here we keep the universally-correct one)
+    tok_key = "embeddings" if cfg.embed_inputs else "tokens"
+    t0 = time.perf_counter()
+    logits = None
+    for t in range(prompt_len):
+        piece = {tok_key: prompts[tok_key][:, t:t + 1]}
+        logits, cache = decode(params, cache, piece,
+                               jnp.asarray(t, jnp.int32))
+    out = []
+    nxt = jnp.argmax(logits[:, -1], axis=-1)
+    for t in range(prompt_len, total):
+        out.append(np.asarray(nxt))
+        if cfg.embed_inputs:
+            piece = {tok_key: jnp.take(params["embed"], nxt[:, None], axis=0)}
+        else:
+            piece = {tok_key: nxt[:, None]}
+        logits, cache = decode(params, cache, piece,
+                               jnp.asarray(t, jnp.int32))
+        nxt = jnp.argmax(logits[:, -1], axis=-1)
+    jax.block_until_ready(logits)
+    dt = time.perf_counter() - t0
+    toks = np.stack(out, axis=1)
+    return toks, batch * total / dt
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    args = ap.parse_args(argv)
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = smoke_config(cfg)
+    toks, tps = serve(cfg, batch=args.batch, prompt_len=args.prompt_len,
+                      gen=args.gen, mesh=make_local_mesh())
+    print(f"generated {toks.shape} tokens at {tps:.1f} tok/s")
+    print(toks[:, :12])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+from .model import LMModel, input_specs, param_specs
+__all__ = ["LMModel", "input_specs", "param_specs"]

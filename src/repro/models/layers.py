@@ -1,0 +1,137 @@
+"""Shared neural layers: norms, MLPs, rotary embeddings, initializers.
+
+Conventions:
+  * params are nested dicts of jnp arrays; compute dtype = activations dtype
+    (bf16 by default), norm/softmax statistics in f32.
+  * weight layouts are chosen so the model-parallel axis is always the one
+    named dimension sharded over 'model' (see model.py sharding rules).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["dense_init", "rmsnorm", "layernorm", "norm_init", "apply_norm",
+           "mlp_init", "mlp_apply", "rope_freqs", "apply_rope",
+           "mrope_apply", "sinusoidal_positions", "softcap"]
+
+
+def dense_init(rng, shape, in_axis_size=None, dtype=jnp.bfloat16):
+    """Truncated-normal fan-in init."""
+    fan_in = in_axis_size if in_axis_size is not None else shape[0]
+    std = 1.0 / math.sqrt(max(1, fan_in))
+    return (jax.random.truncated_normal(rng, -2.0, 2.0, shape, jnp.float32)
+            * std).astype(dtype)
+
+
+def rmsnorm(x, w, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + w.astype(jnp.float32))).astype(x.dtype)
+
+
+def layernorm(x, w, b, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (out * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def norm_init(kind: str, d: int, dtype=jnp.bfloat16):
+    if kind == "layernorm":
+        return {"w": jnp.ones((d,), dtype), "b": jnp.zeros((d,), dtype)}
+    return {"w": jnp.zeros((d,), dtype)}  # rmsnorm stores (scale - 1)
+
+
+def apply_norm(kind: str, x, p):
+    if kind == "layernorm":
+        return layernorm(x, p["w"], p["b"])
+    return rmsnorm(x, p["w"])
+
+
+# ---------------------------------------------------------------------------
+# MLP variants
+# ---------------------------------------------------------------------------
+
+def mlp_init(rng, d: int, f: int, kind: str, dtype=jnp.bfloat16):
+    ks = jax.random.split(rng, 3)
+    if kind in ("swiglu", "geglu"):
+        return {"wg": dense_init(ks[0], (d, f), dtype=dtype),
+                "wu": dense_init(ks[1], (d, f), dtype=dtype),
+                "wd": dense_init(ks[2], (f, d), in_axis_size=f, dtype=dtype)}
+    return {"wu": dense_init(ks[0], (d, f), dtype=dtype),
+            "wd": dense_init(ks[1], (f, d), in_axis_size=f, dtype=dtype)}
+
+
+def mlp_apply(x, p, kind: str):
+    if kind == "swiglu":
+        h = jax.nn.silu(x @ p["wg"]) * (x @ p["wu"])
+    elif kind == "geglu":
+        h = jax.nn.gelu(x @ p["wg"], approximate=True) * (x @ p["wu"])
+    else:  # gelu
+        h = jax.nn.gelu(x @ p["wu"], approximate=True)
+    return h @ p["wd"]
+
+
+# ---------------------------------------------------------------------------
+# Positions
+# ---------------------------------------------------------------------------
+
+def rope_freqs(hd: int, theta: float):
+    """Inverse frequencies [hd//2] (f32)."""
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+
+
+def _rotate(x, cos, sin):
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin,
+                            x2 * cos + x1 * sin], axis=-1).astype(x.dtype)
+
+
+def apply_rope(x, positions, theta: float):
+    """x [..., S, H, hd]; positions broadcastable to [..., S] (int)."""
+    hd = x.shape[-1]
+    inv = rope_freqs(hd, theta)
+    ang = positions.astype(jnp.float32)[..., None] * inv      # [..., S, hd/2]
+    cos = jnp.cos(ang)[..., None, :]                          # [..., S, 1, hd/2]
+    sin = jnp.sin(ang)[..., None, :]
+    return _rotate(x, cos, sin)
+
+
+def mrope_apply(x, positions3, theta: float, sections=(16, 24, 24)):
+    """Qwen2-VL M-RoPE: the hd/2 freq channels split into (t, h, w) groups,
+    each rotated by its own position stream. positions3: [B, 3, S]."""
+    hd = x.shape[-1]
+    assert sum(sections) == hd // 2, (sections, hd)
+    inv = rope_freqs(hd, theta)                               # [hd/2]
+    pos = positions3.astype(jnp.float32)                      # [B,3,S]
+    ang_all = pos[..., None] * inv                            # [B,3,S,hd/2]
+    parts = []
+    off = 0
+    for i, sec in enumerate(sections):
+        parts.append(ang_all[:, i, :, off:off + sec])
+        off += sec
+    ang = jnp.concatenate(parts, axis=-1)                     # [B,S,hd/2]
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    return _rotate(x, cos, sin)
+
+
+def sinusoidal_positions(positions, d: int):
+    """Classic transformer sinusoidal table for given positions [...]."""
+    half = d // 2
+    freq = jnp.exp(-math.log(10_000.0) * jnp.arange(half, dtype=jnp.float32)
+                   / half)
+    ang = positions.astype(jnp.float32)[..., None] * freq
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def softcap(x, cap: Optional[float]):
+    if cap is None:
+        return x
+    return jnp.tanh(x / cap) * cap

@@ -1,0 +1,351 @@
+"""LMModel: the public step API + sharding rules + input specs.
+
+Sharding (see DESIGN.md §4): mesh axes ('pod','data','model') / ('data',
+'model'); batch over the dp axes, heads/d_ff/vocab over 'model', MoE experts
+over 'data' with expert d_ff over 'model'. Optimizer state inherits param
+specs. The same module serves real execution (CPU smoke tests) and the
+abstract multi-pod dry-run (everything below works on ShapeDtypeStructs).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ArchConfig
+from ..optim import (adafactor_init, adafactor_update, adamw_init,
+                     adamw_update)
+from . import transformer as tfm
+
+__all__ = ["LMModel", "param_specs", "input_specs", "batch_specs",
+           "cache_specs", "dp_axes"]
+
+
+def dp_axes(mesh: Mesh, cfg: Optional[ArchConfig] = None):
+    if cfg is not None and cfg.pure_dp:
+        return tuple(mesh.axis_names)
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def _dp_or_none(mesh: Mesh, B: int, cfg: Optional[ArchConfig] = None):
+    dp = dp_axes(mesh, cfg)
+    size = 1
+    for a in dp:
+        size *= mesh.shape[a]
+    return dp if B % size == 0 else None
+
+
+# ---------------------------------------------------------------------------
+# Parameter sharding rules (path + shape pattern matched)
+# ---------------------------------------------------------------------------
+
+def _leaf_spec(names: list[str], leaf_ndim: int) -> P:
+    name = names[-1]
+    stacked = "pattern" in names            # scan axis prepended
+    nd = leaf_ndim - (1 if stacked else 0)
+
+    def out(*spec):
+        assert len(spec) == nd, (names, leaf_ndim, spec)
+        return P(*(((None,) if stacked else ()) + spec))
+
+    moe_ctx = "ffn" in names and nd == 3    # stacked expert weights
+    if name == "embed":
+        return P("model", None)
+    if name == "unembed":
+        return P(None, "model")
+    if name in ("wq", "wk", "wv") and nd == 3:
+        return out(None, "model", None)
+    if name == "wo" and nd == 3:
+        return out("model", None, None)
+    if name in ("bq", "bk", "bv") and nd == 2:
+        return out("model", None)
+    if name in ("wq_b", "wk_b", "wv_b"):
+        return out(None, "model", None)
+    if name in ("wg", "wu"):
+        return out("data", None, "model") if moe_ctx else out(None, "model")
+    if name == "wd":
+        return out("data", "model", None) if moe_ctx else out("model", None)
+    if name in ("wr", "wk", "wv", "wg", "cm_wk", "cm_wr", "wx", "wy",
+                "wa", "wi") and nd == 2:
+        return out(None, "model")
+    if name in ("wo", "cm_wv") and nd == 2:
+        return out("model", None)
+    if name == "u" and nd == 2:             # rwkv bonus [H, dk]
+        return out(None, None)
+    # everything else (norms, biases, router, loras, conv, lambda): replicated
+    return P(*([None] * leaf_ndim))
+
+
+def _sanitize(spec: P, shape, mesh: Optional[Mesh]) -> P:
+    """Drop sharding on dims the mesh axis size does not divide (e.g. 15 GQA
+    heads over model=16 -> replicate; recorded as a hillclimb opportunity)."""
+    if mesh is None:
+        return spec
+    out = []
+    for i, s in enumerate(spec):
+        if s is None:
+            out.append(None)
+            continue
+        axes = s if isinstance(s, tuple) else (s,)
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        out.append(s if shape[i] % size == 0 else None)
+    return P(*out)
+
+
+def param_specs(cfg: ArchConfig, abstract_params, mesh: Optional[Mesh] = None
+                ) -> Any:
+    def spec(path, leaf):
+        if cfg.pure_dp:   # small models: replicate weights, batch everywhere
+            return P(*([None] * leaf.ndim))
+        names = [str(getattr(k, "key", getattr(k, "idx", k))) for k in path]
+        return _sanitize(_leaf_spec(names, leaf.ndim), leaf.shape, mesh)
+    return jax.tree_util.tree_map_with_path(spec, abstract_params)
+
+
+def zero1_specs(cfg: ArchConfig, pspecs, abstract, mesh: Mesh):
+    """ZeRO-1: additionally shard a replicated-or-spare dim over 'data'
+    (over ALL axes under pure_dp). Applied to the grad accumulator and
+    optimizer state (not params)."""
+    zaxes = tuple(mesh.axis_names) if cfg.pure_dp else ("data",)
+    dsize = 1
+    for a in zaxes:
+        dsize *= mesh.shape[a]
+
+    def used(s):
+        return "data" in ((s,) if not isinstance(s, tuple) else s) \
+            if s is not None else False
+
+    def upd(ps, leaf):
+        spec = list(tuple(ps)) + [None] * (leaf.ndim - len(tuple(ps)))
+        if any(used(s) for s in spec):
+            return P(*spec)          # expert weights already shard over data
+        for i, s in enumerate(spec):
+            if s is None and leaf.shape[i] % dsize == 0 and \
+                    leaf.shape[i] >= dsize:
+                spec[i] = zaxes if len(zaxes) > 1 else zaxes[0]
+                break
+        return P(*spec)
+
+    return jax.tree.map(upd, pspecs, abstract,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _state_specs(cfg: ArchConfig, pspecs, abstract_state):
+    """Optimizer state: m/v (or vr/vc) inherit param specs, truncated to the
+    factored shapes for adafactor; scalars replicated."""
+    if cfg.optimizer == "adafactor":
+        def vr_spec(ps, leaf):
+            sp = tuple(ps) if isinstance(ps, P) else (ps,)
+            return P(*sp[:leaf.ndim]) if leaf.ndim else P()
+        # align by tree structure: state.vr / state.vc mirror params
+        vr = jax.tree.map(lambda ps, l: P(*tuple(ps)[:l.ndim]),
+                          pspecs, abstract_state.vr,
+                          is_leaf=lambda x: isinstance(x, P))
+        vc = jax.tree.map(
+            lambda ps, l: P(*(tuple(ps)[:l.ndim - 1] + tuple(ps)[-1:]))
+            if l.ndim > 1 else P(*([None] * l.ndim)),
+            pspecs, abstract_state.vc, is_leaf=lambda x: isinstance(x, P))
+        return type(abstract_state)(step=P(), vr=vr, vc=vc)
+    return type(abstract_state)(step=P(), m=pspecs, v=pspecs)
+
+
+# ---------------------------------------------------------------------------
+# Batch / cache specs (ShapeDtypeStruct factories for the dry-run)
+# ---------------------------------------------------------------------------
+
+def batch_specs(cfg: ArchConfig, mesh: Mesh, B: int, S: int, *, decode=False):
+    """Returns (pytree of ShapeDtypeStruct, pytree of PartitionSpec)."""
+    dp = _dp_or_none(mesh, B, cfg)
+    dt = jnp.dtype(cfg.dtype)
+    shapes, specs = {}, {}
+    if cfg.embed_inputs:
+        shapes["embeddings"] = jax.ShapeDtypeStruct((B, S, cfg.d_model), dt)
+        specs["embeddings"] = P(dp, None, None)
+        if not decode:
+            shapes["labels"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+            specs["labels"] = P(dp, None)
+    else:
+        shapes["tokens"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        specs["tokens"] = P(dp, None)
+    if cfg.rope == "mrope":
+        shapes["positions"] = jax.ShapeDtypeStruct((B, 3, S), jnp.int32)
+        specs["positions"] = P(dp, None, None)
+    return shapes, specs
+
+
+def cache_specs(cfg: ArchConfig, mesh: Mesh, B: int, T: int):
+    dp = _dp_or_none(mesh, B, cfg)
+    abstract = jax.eval_shape(lambda: tfm.init_cache(cfg, B, T))
+
+    def spec(path, leaf):
+        names = [str(getattr(k, "key", getattr(k, "idx", k))) for k in path]
+        stacked = "pattern" in names
+        name = names[-1]
+        base: tuple
+        if name in ("k", "v", "k_scale", "v_scale"):
+            if cfg.shard_cache_t:
+                base = (dp, "model", None, None)
+            else:
+                base = (dp, None, "model", None)
+        elif name in ("ckv", "krope"):
+            base = (dp, "model", None) if cfg.shard_cache_t \
+                else (dp, None, None)
+        elif name == "s":                    # rwkv state [B,H,dk,dv]
+            base = (dp, "model", None, None)
+        elif name in ("x_tm", "x_cm"):
+            base = (dp, None)
+        elif name == "h":
+            base = (dp, "model")
+        elif name == "conv":
+            base = (dp, None, "model")
+        else:
+            base = tuple([None] * leaf.ndim)
+        base = base[:leaf.ndim - (1 if stacked else 0)]
+        full = P(*(((None,) if stacked else ()) + base))
+        return _sanitize(full, leaf.shape, mesh)
+
+    return abstract, jax.tree_util.tree_map_with_path(spec, abstract)
+
+
+def input_specs(cfg: ArchConfig, shape, mesh: Mesh):
+    """ShapeDtypeStruct stand-ins + PartitionSpecs for one (arch, shape) cell.
+
+    train:   (batch,)
+    prefill: (batch,)
+    decode:  (cache, batch, pos)  — one new token against a T=seq_len cache
+    """
+    if shape.kind == "train":
+        b, s = batch_specs(cfg, mesh, shape.global_batch, shape.seq_len)
+        return {"batch": b}, {"batch": s}
+    if shape.kind == "prefill":
+        b, s = batch_specs(cfg, mesh, shape.global_batch, shape.seq_len)
+        return {"batch": b}, {"batch": s}
+    # decode
+    b, bs = batch_specs(cfg, mesh, shape.global_batch, 1, decode=True)
+    cache, cs = cache_specs(cfg, mesh, shape.global_batch, shape.seq_len)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    return ({"cache": cache, "batch": b, "pos": pos},
+            {"cache": cs, "batch": bs, "pos": P()})
+
+
+# ---------------------------------------------------------------------------
+# Model wrapper
+# ---------------------------------------------------------------------------
+
+class LMModel:
+    """Step functions for one architecture, mesh-aware."""
+
+    def __init__(self, cfg: ArchConfig, mesh: Optional[Mesh] = None):
+        self.cfg = cfg
+        self.mesh = mesh
+
+    # ---- params ----------------------------------------------------------
+    def init_params(self, rng):
+        return tfm.init_params(rng, self.cfg)
+
+    def abstract_params(self):
+        return jax.eval_shape(
+            lambda: tfm.init_params(jax.random.key(0), self.cfg))
+
+    def param_partition(self):
+        return param_specs(self.cfg, self.abstract_params(), self.mesh)
+
+    def _constrain(self):
+        mesh = self.mesh
+        if mesh is None:
+            return None
+        dp = dp_axes(mesh, self.cfg)
+        seq = "model" if (self.cfg.seq_parallel
+                          and not self.cfg.pure_dp) else None
+
+        def cst(t, axes):
+            spec = []
+            for i, a in enumerate(axes):
+                if a == "tokens":
+                    spec.append(dp)
+                elif a == "expert":
+                    spec.append(None if self.cfg.pure_dp else "data")
+                elif a == "seq":
+                    spec.append(seq if t.shape[i] % mesh.shape["model"] == 0
+                                else None)
+                else:
+                    spec.append(a)
+            return jax.lax.with_sharding_constraint(
+                t, NamedSharding(mesh, P(*spec)))
+        return cst
+
+    # ---- optimizer -------------------------------------------------------
+    def init_opt(self, params):
+        if self.cfg.optimizer == "adafactor":
+            return adafactor_init(params)
+        return adamw_init(params)
+
+    def opt_partition(self, pspecs):
+        abstract = jax.eval_shape(self.init_opt, self.abstract_params())
+        if self.cfg.zero1 and self.mesh is not None:
+            pspecs = zero1_specs(self.cfg, pspecs,
+                                 self.abstract_params(), self.mesh)
+        return _state_specs(self.cfg, pspecs, abstract)
+
+    # ---- steps -----------------------------------------------------------
+    def loss(self, params, batch):
+        return tfm.loss_fn(params, self.cfg, batch,
+                           constrain=self._constrain())
+
+    def train_step(self, params, opt_state, batch):
+        """Grad accumulation over microbatches (lax.scan), then one update."""
+        cfg = self.cfg
+        bkey = "embeddings" if cfg.embed_inputs else "tokens"
+        B = batch[bkey].shape[0]
+        mb = min(cfg.microbatch, B)
+        n_micro = B // mb
+        acc_dt = jnp.dtype(cfg.grad_accum_dtype)
+
+        def reshape(x):
+            return x.reshape((n_micro, mb) + x.shape[1:])
+
+        micro = jax.tree.map(reshape, batch)
+
+        def gfn(p, b):
+            (l, metrics), g = jax.value_and_grad(self.loss, has_aux=True)(p, b)
+            return g, metrics
+
+        def step(acc, mb_batch):
+            g, metrics = gfn(params, mb_batch)
+            acc = jax.tree.map(lambda a, gi: a + gi.astype(acc_dt), acc, g)
+            return acc, metrics
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, acc_dt), params)
+        if cfg.zero1 and self.mesh is not None:
+            gspecs = zero1_specs(cfg, self.param_partition(),
+                                 self.abstract_params(), self.mesh)
+            gshard = jax.tree.map(
+                lambda s: NamedSharding(self.mesh, s), gspecs,
+                is_leaf=lambda x: isinstance(x, P))
+            zeros = jax.tree.map(jax.lax.with_sharding_constraint, zeros,
+                                 gshard)
+        grads, metrics = jax.lax.scan(step, zeros, micro)
+        grads = jax.tree.map(lambda g: g / n_micro, grads)
+        if cfg.optimizer == "adafactor":
+            new_params, new_state, gn = adafactor_update(grads, opt_state,
+                                                         params)
+        else:
+            new_params, new_state, gn = adamw_update(grads, opt_state, params)
+        out_metrics = {"loss": jnp.mean(metrics["loss"]),
+                       "aux": jnp.mean(metrics["aux"]), "grad_norm": gn}
+        return new_params, new_state, out_metrics
+
+    def prefill_step(self, params, batch):
+        logits, caches, _ = tfm.forward_full(params, self.cfg, batch,
+                                             constrain=self._constrain(),
+                                             want_cache=True)
+        return logits[:, -1], caches
+
+    def decode_step(self, params, cache, batch, pos):
+        return tfm.forward_decode(params, self.cfg, cache, batch, pos,
+                                  constrain=self._constrain())

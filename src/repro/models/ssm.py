@@ -1,0 +1,279 @@
+"""Recurrent token mixers: RWKV-6 "Finch" and RG-LRU (RecurrentGemma/Griffin).
+
+RWKV-6: data-dependent per-channel decay w_t, token-shift lerp with a shared
+LoRA, per-head wkv state S [dk, dv]. Training uses a chunked formulation:
+within a chunk all pairwise (t, s) interactions are computed in parallel via
+log-space decay ratios (all ratios <= 1, numerically safe); the state carries
+across chunks through a lax.scan — O(S·C) memory, sequential only in S/C.
+
+RG-LRU: h_t = a_t·h_{t-1} + sqrt(1-a_t^2)·(i_t ⊙ u_t) with a_t data-dependent
+diagonal decay; training uses lax.associative_scan (parallel prefix) over the
+(a, b) composition monoid — the TPU-native translation of the GPU linear-scan
+kernel. Both expose single-step decode with constant-size state.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init
+
+__all__ = ["rwkv_init", "rwkv_time_mix", "rwkv_channel_mix", "rwkv_decode",
+           "rwkv_init_state", "rglru_init", "rglru_apply", "rglru_decode",
+           "rglru_init_state"]
+
+
+# ---------------------------------------------------------------------------
+# RWKV-6
+# ---------------------------------------------------------------------------
+
+_MIXES = ("r", "k", "v", "g", "w")
+
+
+def rwkv_init(rng, cfg, dtype):
+    d = cfg.d_model
+    dk = cfg.rec.head_dim
+    H = d // dk
+    f = cfg.d_ff
+    ks = iter(jax.random.split(rng, 24))
+    lora = 32
+    p = {
+        # token-shift mixing: base mus + shared-A LoRA (simplified from the
+        # per-mix A of the reference impl; noted in DESIGN.md)
+        "mu_x": jnp.zeros((d,), dtype),
+        "mu": {m: jnp.zeros((d,), dtype) for m in _MIXES},
+        "lora_a": dense_init(next(ks), (d, lora), dtype=dtype),
+        "lora_b": {m: dense_init(next(ks), (lora, d), in_axis_size=lora,
+                                 dtype=dtype) for m in _MIXES},
+        "wr": dense_init(next(ks), (d, d), dtype=dtype),
+        "wk": dense_init(next(ks), (d, d), dtype=dtype),
+        "wv": dense_init(next(ks), (d, d), dtype=dtype),
+        "wg": dense_init(next(ks), (d, d), dtype=dtype),
+        # decay: w_t = exp(-exp(w0 + tanh(x_w A_w) B_w))
+        "w0": jnp.full((d,), -6.0, jnp.float32),
+        "wa": dense_init(next(ks), (d, 64), dtype=dtype),
+        "wb": dense_init(next(ks), (64, d), in_axis_size=64, dtype=dtype),
+        "u": jnp.zeros((H, dk), jnp.float32),           # current-token bonus
+        "ln_w": jnp.ones((d,), dtype), "ln_b": jnp.zeros((d,), dtype),
+        "wo": dense_init(next(ks), (d, d), dtype=dtype),
+        # channel mix
+        "cm_mu_k": jnp.zeros((d,), dtype), "cm_mu_r": jnp.zeros((d,), dtype),
+        "cm_wk": dense_init(next(ks), (d, f), dtype=dtype),
+        "cm_wv": dense_init(next(ks), (f, d), in_axis_size=f, dtype=dtype),
+        "cm_wr": dense_init(next(ks), (d, d), dtype=dtype),
+    }
+    return p
+
+
+def _shift(x, x_prev=None):
+    """[B,S,d] -> previous token (zeros / carried state at t=0)."""
+    pad = jnp.zeros_like(x[:, :1]) if x_prev is None else x_prev[:, None]
+    return jnp.concatenate([pad, x[:, :-1]], axis=1)
+
+
+def _token_shift(x, xs, p):
+    delta = xs - x
+    xxx = x + delta * p["mu_x"]
+    a = jnp.tanh(xxx @ p["lora_a"])
+    return {m: x + delta * (p["mu"][m] + a @ p["lora_b"][m]) for m in _MIXES}
+
+
+def _decay(xw, p):
+    wlog = -jnp.exp(p["w0"] + jnp.tanh(xw.astype(jnp.float32) @
+                                       p["wa"].astype(jnp.float32))
+                    @ p["wb"].astype(jnp.float32))      # log w_t  (<= 0)
+    return wlog
+
+
+def _group_norm(x, w, b, H, eps=1e-5):
+    """Per-head LayerNorm of the wkv output ([..., H, dk] flattened to d)."""
+    shp = x.shape
+    xg = x.reshape(shp[:-1] + (H, shp[-1] // H)).astype(jnp.float32)
+    mu = xg.mean(-1, keepdims=True)
+    var = xg.var(-1, keepdims=True)
+    xg = (xg - mu) * jax.lax.rsqrt(var + eps)
+    return (xg.reshape(shp) * w.astype(jnp.float32)
+            + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def _wkv_chunk(r, k, v, wlog, u, s0):
+    """One chunk of the wkv recurrence (all f32).
+    r,k,v: [B,C,H,dk]; wlog: [B,C,H,dk] (log decay, <=0); u: [H,dk];
+    s0: [B,H,dk,dv]. Returns (out [B,C,H,dv], s1)."""
+    B, C, H, dk = r.shape
+    lp = jnp.cumsum(wlog, axis=1)                       # log w_1..t (incl.)
+    lpx = lp - wlog                                     # log w_1..t-1 (excl.)
+    # carry-in: token i<=0 reaches output t through decay w_1..w_{t-1}
+    rp = r * jnp.exp(lpx)
+    o_carry = jnp.einsum("bchk,bhkv->bchv", rp, s0)
+    # intra-chunk: token s reaches output t>s through decay w_{s+1}..w_{t-1}
+    ratio = jnp.exp(lpx[:, :, None] - lp[:, None, :])   # [B,C,C,H,dk] (t,s)
+    tri = (jnp.arange(C)[:, None] > jnp.arange(C)[None, :])[None, :, :, None,
+                                                            None]
+    scores = jnp.einsum("bthk,btshk,bshk->bths", r, jnp.where(tri, ratio, 0.0),
+                        k)
+    o_intra = jnp.einsum("bths,bshv->bthv", scores, v)
+    o_diag = jnp.einsum("bthk,hk,bthk->bth", r, u, k)[..., None] * v
+    # state update: S1 = diag(P_C) S0 + sum_s (k_s ⊙ P_C/P_s)^T v_s
+    pc = jnp.exp(lp[:, -1])                             # [B,H,dk]
+    kfac = k * jnp.exp(lp[:, -1][:, None] - lp)         # k_s ⊙ P_C / P_s
+    s1 = pc[..., None] * s0 + jnp.einsum("bshk,bshv->bhkv", kfac, v)
+    return o_carry + o_intra + o_diag, s1
+
+
+def rwkv_time_mix(x, p, cfg, x_prev=None, s0=None):
+    """Full-sequence RWKV-6 time mix. Returns (out, (x_last, s_final))."""
+    B, S, d = x.shape
+    dk = cfg.rec.head_dim
+    H = d // dk
+    C = min(cfg.rec.chunk, S)
+    assert S % C == 0, (S, C)
+    mixed = _token_shift(x, _shift(x, x_prev), p)
+    r = (mixed["r"] @ p["wr"]).reshape(B, S, H, dk).astype(jnp.float32)
+    k = (mixed["k"] @ p["wk"]).reshape(B, S, H, dk).astype(jnp.float32)
+    v = (mixed["v"] @ p["wv"]).reshape(B, S, H, dk).astype(jnp.float32)
+    g = jax.nn.silu(mixed["g"] @ p["wg"])
+    wlog = _decay(mixed["w"], p).reshape(B, S, H, dk)
+    if s0 is None:
+        s0 = jnp.zeros((B, H, dk, dk), jnp.float32)
+
+    nchunk = S // C
+    def step(s, args):
+        rc, kc, vc, wc = args
+        o, s = _wkv_chunk(rc, kc, vc, wc, p["u"], s)
+        return s, o
+
+    xs = [a.reshape(B, nchunk, C, H, dk).transpose(1, 0, 2, 3, 4)
+          for a in (r, k, v, wlog)]
+    s_fin, outs = jax.lax.scan(step, s0, tuple(xs))
+    o = outs.transpose(1, 0, 2, 3, 4).reshape(B, S, d)
+    o = _group_norm(o.astype(x.dtype), p["ln_w"], p["ln_b"], H)
+    out = (o * g) @ p["wo"]
+    return out, (x[:, -1], s_fin)
+
+
+def rwkv_channel_mix(x, p, x_prev=None):
+    xs = _shift(x, x_prev)
+    xk = x + (xs - x) * p["cm_mu_k"]
+    xr = x + (xs - x) * p["cm_mu_r"]
+    k = jnp.square(jax.nn.relu(xk @ p["cm_wk"]))
+    return jax.nn.sigmoid(xr @ p["cm_wr"]) * (k @ p["cm_wv"]), x[:, -1]
+
+
+def rwkv_init_state(cfg, B: int):
+    d = cfg.d_model
+    dk = cfg.rec.head_dim
+    H = d // dk
+    return {"s": jnp.zeros((B, H, dk, dk), jnp.float32),
+            "x_tm": jnp.zeros((B, d), jnp.float32),
+            "x_cm": jnp.zeros((B, d), jnp.float32)}
+
+
+def rwkv_decode(x, p, cfg, state):
+    """Single-token step. x [B,1,d]; state {"s","x_tm","x_cm"}; this covers
+    BOTH time mix and channel mix (the block glue lives in transformer.py)."""
+    B, _, d = x.shape
+    dk = cfg.rec.head_dim
+    H = d // dk
+    xt = x[:, 0].astype(jnp.float32)
+    mixed = _token_shift(x, state["x_tm"][:, None].astype(x.dtype), p)
+    r = (mixed["r"] @ p["wr"]).reshape(B, H, dk).astype(jnp.float32)
+    k = (mixed["k"] @ p["wk"]).reshape(B, H, dk).astype(jnp.float32)
+    v = (mixed["v"] @ p["wv"]).reshape(B, H, dk).astype(jnp.float32)
+    g = jax.nn.silu(mixed["g"] @ p["wg"])[:, 0]
+    w = jnp.exp(_decay(mixed["w"], p)).reshape(B, H, dk)
+    s = state["s"]
+    # o_t = r·(u ⊙ (k ⊗ v) + S)
+    kv = jnp.einsum("bhk,bhv->bhkv", k, v)
+    o = jnp.einsum("bhk,bhkv->bhv", r, s + p["u"][None, :, :, None] * kv)
+    s_new = w[..., None] * s + kv
+    o = o.reshape(B, d)
+    o = _group_norm(o.astype(x.dtype), p["ln_w"], p["ln_b"], H)
+    out_tm = ((o * g) @ p["wo"])[:, None]
+    return out_tm, {"s": s_new, "x_tm": xt, "x_cm": state["x_cm"]}
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU (RecurrentGemma / Griffin recurrent block)
+# ---------------------------------------------------------------------------
+
+def rglru_init(rng, cfg, dtype):
+    d = cfg.d_model
+    w = cfg.rec.lru_width or d
+    cw = cfg.rec.conv_width
+    ks = iter(jax.random.split(rng, 8))
+    return {
+        "wx": dense_init(next(ks), (d, w), dtype=dtype),    # recurrent branch
+        "wy": dense_init(next(ks), (d, w), dtype=dtype),    # gate branch
+        "conv_w": dense_init(next(ks), (cw, w), dtype=dtype),
+        "conv_b": jnp.zeros((w,), dtype),
+        "wa": dense_init(next(ks), (w, w), dtype=dtype),    # recurrence gate
+        "ba": jnp.zeros((w,), jnp.float32),
+        "wi": dense_init(next(ks), (w, w), dtype=dtype),    # input gate
+        "bi": jnp.zeros((w,), jnp.float32),
+        "lam": jnp.full((w,), 3.0, jnp.float32),            # Λ (softplus)
+        "wo": dense_init(next(ks), (w, d), in_axis_size=w, dtype=dtype),
+    }
+
+
+_C_RGLRU = 8.0
+
+
+def _causal_conv(u, w, b, state=None):
+    """Depthwise causal conv1d. u [B,S,w]; w [cw, w]; state [B, cw-1, w]."""
+    cw = w.shape[0]
+    pad = (jnp.zeros((u.shape[0], cw - 1, u.shape[2]), u.dtype)
+           if state is None else state.astype(u.dtype))
+    up = jnp.concatenate([pad, u], axis=1)
+    out = sum(up[:, i:i + u.shape[1]] * w[i] for i in range(cw)) + b
+    return out, up[:, -(cw - 1):]
+
+
+def _rglru_gates(u, p):
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(uf @ p["wa"].astype(jnp.float32) + p["ba"])
+    i = jax.nn.sigmoid(uf @ p["wi"].astype(jnp.float32) + p["bi"])
+    log_a = -_C_RGLRU * r * jax.nn.softplus(p["lam"])    # [B,S,w] (<= 0)
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * uf)
+    return a, b
+
+
+def rglru_apply(x, p, cfg, state=None):
+    """Full-sequence recurrent block. Returns (out, {"h", "conv"})."""
+    u0 = x @ p["wx"]
+    gate = jax.nn.gelu(x @ p["wy"], approximate=True)
+    conv_state = None if state is None else state["conv"]
+    u, conv_new = _causal_conv(u0, p["conv_w"], p["conv_b"], conv_state)
+    a, b = _rglru_gates(u, p)
+    if state is not None:
+        # inject carried h0 through the first step: b_0 += a_0 * h0
+        b = b.at[:, 0].add(a[:, 0] * state["h"])
+
+    def combine(l, r_):
+        al, bl = l
+        ar, br = r_
+        return al * ar, ar * bl + br
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    out = ((h.astype(x.dtype) * gate) @ p["wo"])
+    return out, {"h": h[:, -1], "conv": conv_new.astype(jnp.float32)}
+
+
+def rglru_init_state(cfg, B: int):
+    w = cfg.rec.lru_width or cfg.d_model
+    return {"h": jnp.zeros((B, w), jnp.float32),
+            "conv": jnp.zeros((B, cfg.rec.conv_width - 1, w), jnp.float32)}
+
+
+def rglru_decode(x, p, cfg, state):
+    """Single-step. x [B,1,d]."""
+    u0 = x @ p["wx"]
+    gate = jax.nn.gelu(x @ p["wy"], approximate=True)
+    u, conv_new = _causal_conv(u0, p["conv_w"], p["conv_b"], state["conv"])
+    a, b = _rglru_gates(u, p)
+    h = a[:, 0] * state["h"] + b[:, 0]
+    out = ((h[:, None].astype(x.dtype) * gate) @ p["wo"])
+    return out, {"h": h, "conv": conv_new.astype(jnp.float32)}

@@ -1,0 +1,317 @@
+"""Decoder stack: layer-kind dispatch, scan-over-pattern stacking, remat.
+
+The layer layout is (prefix, pattern × repeats, suffix) from the ArchConfig:
+the repeated pattern is stacked on a leading axis and driven by lax.scan so
+the HLO contains ONE copy of the pattern regardless of depth (compile time
+and SPMD partitioning cost stay flat); irregular prefix/suffix layers unroll.
+Each scan step is wrapped in jax.checkpoint (full remat: only layer-boundary
+activations survive the forward pass).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn
+from . import ssm
+from .layers import (apply_norm, dense_init, mlp_apply, mlp_init, norm_init,
+                     sinusoidal_positions, softcap)
+from .moe import moe_apply, moe_init
+
+__all__ = ["init_params", "forward_full", "forward_decode", "init_cache",
+           "loss_fn", "KIND_MIXER"]
+
+KIND_MIXER = {
+    "attn": "attn", "attn_local": "attn", "attn_global": "attn",
+    "attn_moe": "attn", "mla_dense": "mla", "mla_moe": "mla",
+    "rwkv": "rwkv", "rec": "rec",
+}
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Per-block init / apply
+# ---------------------------------------------------------------------------
+
+def init_block(rng, cfg, kind: str):
+    dt = _dtype(cfg)
+    d = cfg.d_model
+    ks = jax.random.split(rng, 4)
+    mixer = KIND_MIXER[kind]
+    p: dict[str, Any] = {"ln1": norm_init(cfg.norm, d, dt)}
+    if mixer == "attn":
+        p["mix"] = attn.attn_init(ks[0], cfg, dt)
+    elif mixer == "mla":
+        p["mix"] = attn.mla_init(ks[0], cfg, dt)
+    elif mixer == "rwkv":
+        p["mix"] = ssm.rwkv_init(ks[0], cfg, dt)
+        p["ln2"] = norm_init(cfg.norm, d, dt)
+        return p                      # rwkv carries its own channel mix
+    elif mixer == "rec":
+        p["mix"] = ssm.rglru_init(ks[0], cfg, dt)
+    p["ln2"] = norm_init(cfg.norm, d, dt)
+    if kind.endswith("_moe"):
+        p["ffn"] = moe_init(ks[1], d, cfg.moe, dt)
+    else:
+        p["ffn"] = mlp_init(ks[1], d, cfg.d_ff, cfg.mlp, dt)
+    if cfg.post_norm:
+        p["pn1"] = norm_init(cfg.norm, d, dt)
+        p["pn2"] = norm_init(cfg.norm, d, dt)
+    return p
+
+
+def apply_block(p, x, cfg, kind: str, *, positions=None, cache=None, pos=None,
+                constrain=None):
+    """mode is implied: cache None => full-sequence; else one-token decode.
+    Returns (x, new_cache_or_state, aux_loss)."""
+    mixer = KIND_MIXER[kind]
+    aux = jnp.zeros((), jnp.float32)
+    h = apply_norm(cfg.norm, x, p["ln1"])
+    if mixer == "attn":
+        if cache is None:
+            o, kv = attn.attn_apply(h, p["mix"], cfg, kind, positions)
+            new_cache = kv
+        else:
+            o, new_cache = attn.attn_decode(h, p["mix"], cfg, kind, cache, pos)
+    elif mixer == "mla":
+        if cache is None:
+            o, new_cache = attn.mla_apply(h, p["mix"], cfg, positions)
+        else:
+            o, new_cache = attn.mla_decode(h, p["mix"], cfg, cache, pos)
+    elif mixer == "rec":
+        if cache is None:
+            o, new_cache = ssm.rglru_apply(h, p["mix"], cfg)
+        else:
+            o, new_cache = ssm.rglru_decode(h, p["mix"], cfg, cache)
+    else:  # rwkv: time mix + channel mix (its own block structure)
+        if cache is None:
+            o, (x_tm, s_fin) = ssm.rwkv_time_mix(h, p["mix"], cfg)
+            x = x + o
+            h2 = apply_norm(cfg.norm, x, p["ln2"])
+            o2, x_cm = ssm.rwkv_channel_mix(h2, p["mix"])
+            new_cache = {"s": s_fin, "x_tm": x_tm.astype(jnp.float32),
+                         "x_cm": x_cm.astype(jnp.float32)}
+            return x + o2, new_cache, aux
+        else:
+            o, st = ssm.rwkv_decode(h, p["mix"], cfg, cache)
+            x = x + o
+            h2 = apply_norm(cfg.norm, x, p["ln2"])
+            o2, x_cm = ssm.rwkv_channel_mix(
+                h2, p["mix"], x_prev=cache["x_cm"].astype(h2.dtype))
+            st["x_cm"] = x_cm.astype(jnp.float32)
+            return x + o2, st, aux
+    if cfg.post_norm:
+        o = apply_norm(cfg.norm, o, p["pn1"])
+    x = x + o
+    h = apply_norm(cfg.norm, x, p["ln2"])
+    if kind.endswith("_moe"):
+        f, aux = moe_apply(h, p["ffn"], cfg.moe, constrain=constrain)
+    else:
+        f = mlp_apply(h, p["ffn"], cfg.mlp)
+    if cfg.post_norm:
+        f = apply_norm(cfg.norm, f, p["pn2"])
+    return x + f, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Whole-model init / forward
+# ---------------------------------------------------------------------------
+
+def init_params(rng, cfg):
+    dt = _dtype(cfg)
+    pre, pat, reps, suf = cfg.layer_kinds()
+    n_static = len(pre) + len(suf)
+    ks = jax.random.split(rng, 3 + n_static + len(pat))
+    params = {
+        "embed": dense_init(ks[0], (cfg.vocab, cfg.d_model), dtype=dt),
+        "unembed": dense_init(ks[1], (cfg.d_model, cfg.vocab), dtype=dt),
+        "lnf": norm_init(cfg.norm, cfg.d_model, dt),
+    }
+    ki = 2
+    params["prefix"] = []
+    for kind in pre:
+        params["prefix"].append(init_block(ks[ki], cfg, kind))
+        ki += 1
+    params["suffix"] = []
+    for kind in suf:
+        params["suffix"].append(init_block(ks[ki], cfg, kind))
+        ki += 1
+    # pattern params stacked over repeats (scan axis)
+    pattern_params = []
+    for j, kind in enumerate(pat):
+        sub = jax.random.split(ks[ki + j], reps)
+        pattern_params.append(
+            jax.vmap(lambda r: init_block(r, cfg, kind))(sub))
+    params["pattern"] = pattern_params
+    return params
+
+
+def _embed_inputs(params, cfg, batch):
+    if cfg.embed_inputs:
+        x = batch["embeddings"].astype(_dtype(cfg))
+    else:
+        x = jnp.take(params["embed"], batch["tokens"], axis=0)
+    if cfg.embed_scale:
+        x = (x.astype(jnp.float32) * (cfg.d_model ** 0.5)).astype(x.dtype)
+    return x
+
+
+def _positions(cfg, batch, B, S, offset=0):
+    if cfg.rope == "mrope":
+        if "positions" in batch:
+            return batch["positions"]
+        base = jnp.arange(S) + offset
+        return jnp.broadcast_to(base, (B, 3, S))
+    return jnp.broadcast_to(jnp.arange(S) + offset, (B, S))
+
+
+def forward_full(params, cfg, batch, *, constrain=None, want_cache=False):
+    """Returns (logits [B,S,V], caches, aux). Used by train and prefill."""
+    pre, pat, reps, suf = cfg.layer_kinds()
+    x = _embed_inputs(params, cfg, batch)
+    B, S = x.shape[0], x.shape[1]
+    positions = _positions(cfg, batch, B, S)
+    if cfg.rope == "sinusoidal":
+        x = x + sinusoidal_positions(jnp.arange(S), cfg.d_model
+                                     ).astype(x.dtype)[None]
+    aux_total = jnp.zeros((), jnp.float32)
+    caches = {"prefix": [], "pattern": None, "suffix": []}
+
+    def run_block(p, x, kind):
+        if constrain is not None:
+            # layer-boundary residency: batch over dp, optionally S over
+            # 'model' (sequence parallelism; norms/residuals stay local)
+            x = constrain(x, ("tokens", "seq", None))
+        return apply_block(p, x, cfg, kind, positions=positions,
+                           constrain=constrain)
+
+    for p, kind in zip(params["prefix"], pre):
+        fn = jax.checkpoint(functools.partial(run_block, kind=kind))
+        x, c, a = fn(p, x)
+        aux_total += a
+        caches["prefix"].append(c)
+
+    def scan_step(carry, p_group):
+        x, aux = carry
+        def inner(x, p_group):
+            cs = []
+            a_sum = jnp.zeros((), jnp.float32)
+            for j, kind in enumerate(pat):
+                x, c, a = run_block(p_group[j], x, kind)
+                cs.append(c)
+                a_sum += a
+            return x, tuple(cs), a_sum
+        x, cs, a = jax.checkpoint(inner)(x, p_group)
+        return (x, aux + a), cs
+
+    if reps > 0:
+        (x, aux_total), pat_caches = jax.lax.scan(
+            scan_step, (x, aux_total), tuple(params["pattern"]))
+        caches["pattern"] = pat_caches
+
+    for p, kind in zip(params["suffix"], suf):
+        fn = jax.checkpoint(functools.partial(run_block, kind=kind))
+        x, c, a = fn(p, x)
+        aux_total += a
+        caches["suffix"].append(c)
+
+    x = apply_norm(cfg.norm, x, params["lnf"])
+    logits = jnp.einsum("bsd,dv->bsv", x, params["unembed"])
+    logits = softcap(logits.astype(jnp.float32), cfg.logit_softcap)
+    return logits, (caches if want_cache else None), aux_total
+
+
+def forward_decode(params, cfg, cache, batch, pos, *, constrain=None):
+    """One-token step. batch: {"tokens" [B,1]} or {"embeddings" [B,1,d]}.
+    cache mirrors init_cache(). Returns (logits [B,1,V], new_cache)."""
+    pre, pat, reps, suf = cfg.layer_kinds()
+    x = _embed_inputs(params, cfg, batch)
+    if cfg.rope == "sinusoidal":
+        x = x + sinusoidal_positions(pos[None], cfg.d_model).astype(x.dtype)[None]
+
+    new_cache = {"prefix": [], "pattern": None, "suffix": []}
+    for p, kind, c in zip(params["prefix"], pre, cache["prefix"]):
+        x, c2, _ = apply_block(p, x, cfg, kind, cache=c, pos=pos,
+                               constrain=constrain)
+        new_cache["prefix"].append(c2)
+
+    def scan_step(x, pc):
+        p_group, c_group = pc
+        cs = []
+        for j, kind in enumerate(pat):
+            x, c2, _ = apply_block(p_group[j], x, cfg, kind, cache=c_group[j],
+                                   pos=pos, constrain=constrain)
+            cs.append(c2)
+        return x, tuple(cs)
+
+    if reps > 0:
+        x, pat_caches = jax.lax.scan(
+            scan_step, x, (tuple(params["pattern"]), cache["pattern"]))
+        new_cache["pattern"] = pat_caches
+
+    for p, kind, c in zip(params["suffix"], suf, cache["suffix"]):
+        x, c2, _ = apply_block(p, x, cfg, kind, cache=c, pos=pos,
+                               constrain=constrain)
+        new_cache["suffix"].append(c2)
+
+    x = apply_norm(cfg.norm, x, params["lnf"])
+    logits = jnp.einsum("bsd,dv->bsv", x, params["unembed"])
+    logits = softcap(logits.astype(jnp.float32), cfg.logit_softcap)
+    return logits, new_cache
+
+
+def _cache_for_kind(cfg, kind, B, T, dt):
+    mixer = KIND_MIXER[kind]
+    if mixer == "attn":
+        Tk = min(T, cfg.window) if kind == "attn_local" and cfg.window else T
+        return attn.init_kv_cache(cfg, kind, B, Tk, dt)
+    if mixer == "mla":
+        return attn.init_mla_cache(cfg, B, T, dt)
+    if mixer == "rwkv":
+        return ssm.rwkv_init_state(cfg, B)
+    return ssm.rglru_init_state(cfg, B)
+
+
+def init_cache(cfg, B: int, T: int):
+    """Decode cache sized for positions [0, T). Local windows clamp storage;
+    recurrent kinds store constant-size state (long_500k feasibility)."""
+    dt = _dtype(cfg)
+    pre, pat, reps, suf = cfg.layer_kinds()
+    cache = {
+        "prefix": [_cache_for_kind(cfg, k, B, T, dt) for k in pre],
+        "suffix": [_cache_for_kind(cfg, k, B, T, dt) for k in suf],
+        "pattern": None,
+    }
+    if reps > 0:
+        def rep(k):
+            one = _cache_for_kind(cfg, k, B, T, dt)
+            return jax.tree.map(
+                lambda a: jnp.broadcast_to(a[None], (reps,) + a.shape), one)
+        cache["pattern"] = tuple(rep(k) for k in pat)
+    return cache
+
+
+def loss_fn(params, cfg, batch, *, constrain=None):
+    """Next-token cross entropy (mean over predicted positions).
+
+    Sharding note: the vocab axis of ``logits`` is model-sharded; we avoid
+    ``take_along_axis`` over it (which would all-gather the full [B,S,V]
+    logits) by contracting against an iota==label mask — logsumexp and the
+    label-logit contraction both reduce the sharded axis locally + one small
+    psum (measured in EXPERIMENTS.md §Perf, hillclimb #1).
+    """
+    logits, _, aux = forward_full(params, cfg, batch, constrain=constrain)
+    labels = batch["labels"] if "labels" in batch else batch["tokens"]
+    lg = logits[:, :-1].astype(jnp.float32)
+    tgt = labels[:, 1:]
+    lse = jax.nn.logsumexp(lg, axis=-1)                        # [B,S-1]
+    vmask = jax.nn.one_hot(tgt, cfg.vocab, dtype=jnp.float32)  # fused w/ mult
+    ll = jnp.sum(lg * vmask, axis=-1)
+    loss = jnp.mean(lse - ll)
+    return loss + 0.01 * aux, {"loss": loss, "aux": aux}

@@ -1,0 +1,7 @@
+from .adamw import AdamWState, adamw_init, adamw_update, clip_by_global_norm
+from .adafactor import AdafactorState, adafactor_init, adafactor_update
+from .compress import compress_grads, decompress_grads, ef_init, ef_apply
+
+__all__ = ["AdamWState", "adamw_init", "adamw_update", "clip_by_global_norm",
+           "AdafactorState", "adafactor_init", "adafactor_update",
+           "compress_grads", "decompress_grads", "ef_init", "ef_apply"]

@@ -1,0 +1,74 @@
+"""Adafactor (factored second moment) — for the MoE giants where AdamW's
+8 bytes/param of state cannot fit a single v5e pod (DESIGN.md, deepseek-v3).
+
+Factored along the two trailing dims for rank >= 2 tensors; full second
+moment for vectors. No first moment (beta1 = 0), update clipping d=1.0,
+relative step size replaced by fixed lr for simplicity (documented)."""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdafactorState", "adafactor_init", "adafactor_update"]
+
+
+class AdafactorState(NamedTuple):
+    step: jnp.ndarray
+    vr: dict   # row factors (or full v for rank-1)
+    vc: dict   # col factors (zeros placeholder for rank-1)
+
+
+def _factored(p):
+    return p.ndim >= 2
+
+
+def adafactor_init(params):
+    def vr_init(p):
+        if _factored(p):
+            return jnp.zeros(p.shape[:-1], jnp.float32)
+        return jnp.zeros(p.shape, jnp.float32)
+
+    def vc_init(p):
+        if _factored(p):
+            return jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+        return jnp.zeros((1,), jnp.float32)
+
+    return AdafactorState(step=jnp.zeros((), jnp.int32),
+                          vr=jax.tree.map(vr_init, params),
+                          vc=jax.tree.map(vc_init, params))
+
+
+def adafactor_update(grads, state: AdafactorState, params, *, lr=1e-3,
+                     decay=0.8, eps=1e-30, clip=1.0, wd=0.0):
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    beta2 = 1.0 - t ** (-decay)
+
+    def upd(g, vr, vc, p):
+        g = g.astype(jnp.float32)
+        g2 = g * g + eps
+        if _factored(p):
+            vr2 = beta2 * vr + (1 - beta2) * jnp.mean(g2, axis=-1)
+            vc2 = beta2 * vc + (1 - beta2) * jnp.mean(g2, axis=-2)
+            denom = (vr2[..., None] * vc2[..., None, :]
+                     / jnp.maximum(jnp.mean(vr2, axis=-1,
+                                            keepdims=True)[..., None], eps))
+            u = g * jax.lax.rsqrt(jnp.maximum(denom, eps))
+        else:
+            vr2 = beta2 * vr + (1 - beta2) * g2
+            vc2 = vc
+            u = g * jax.lax.rsqrt(jnp.maximum(vr2, eps))
+        # update clipping (RMS <= clip)
+        rms = jnp.sqrt(jnp.mean(u * u) + 1e-12)
+        u = u / jnp.maximum(1.0, rms / clip)
+        if wd:
+            u = u + wd * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype), vr2, vc2
+
+    out = jax.tree.map(upd, grads, state.vr, state.vc, params)
+    tup = lambda i: jax.tree.map(lambda o: o[i], out,
+                                 is_leaf=lambda x: isinstance(x, tuple))
+    return tup(0), AdafactorState(step=step, vr=tup(1), vc=tup(2)), \
+        jnp.zeros(())

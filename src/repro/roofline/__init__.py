@@ -1,0 +1,5 @@
+from .analysis import RooflineReport, analyze, collective_bytes, model_flops, count_params
+from .analytic import StepCost, cost_for, train_cost, prefill_cost, decode_cost
+__all__ = ["RooflineReport", "analyze", "collective_bytes", "model_flops",
+           "count_params", "StepCost", "cost_for", "train_cost",
+           "prefill_cost", "decode_cost"]

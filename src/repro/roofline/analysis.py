@@ -1,0 +1,211 @@
+"""Roofline term extraction from a compiled (dry-run) artifact.
+
+  compute term    = HLO_FLOPs / (chips × peak_FLOP/s)
+  memory term     = HLO_bytes / (chips × HBM_bw)
+  collective term = collective_bytes / (chips × link_bw)
+
+FLOPs/bytes come from ``compiled.cost_analysis()``. Collective bytes are NOT
+in cost_analysis: we parse the post-SPMD optimized HLO text and sum operand
+sizes of all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute ops. Sizes are per-program (i.e. per-device) in SPMD HLO,
+which is exactly the per-chip number the roofline wants.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+from ..launch.mesh import HW
+
+__all__ = ["RooflineReport", "collective_bytes", "analyze", "model_flops"]
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """'bf16[8,128]{1,0}' -> bytes."""
+    m = _SHAPE_RE.match(shape_str.strip())
+    if not m:
+        return 0
+    dt, dims = m.groups()
+    b = _DTYPE_BYTES.get(dt)
+    if b is None:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * b
+
+
+def _result_shapes(lhs: str) -> list[str]:
+    """Result type of an HLO instruction line (handles tuples)."""
+    # '%x = (f32[2,4]{...}, f32[4]{...}) all-reduce(...)' or
+    # '%x = f32[2,4]{...} all-reduce(...)'
+    m = re.search(r"=\s*\(([^)]*)\)\s*[\w-]+\(", lhs)
+    if m:
+        return [s for s in m.group(1).split(", ") if "[" in s]
+    m = re.search(r"=\s*([\w\[\],{}]+)\s*[\w-]+\(", lhs)
+    return [m.group(1)] if m else []
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Per-collective-kind byte totals from optimized HLO (per device)."""
+    out = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        for kind in _COLLECTIVES:
+            # match op name before '(' e.g. ' all-reduce(' / ' all-gather-start('
+            if re.search(rf"=.*\s{kind}(-start)?\(", ls):
+                for s in _result_shapes(ls):
+                    out[kind] += _shape_bytes(s)
+                break
+    return out
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    name: str
+    chips: int
+    hlo_flops: float
+    hlo_bytes: float
+    coll_bytes: float            # per device
+    coll_breakdown: dict
+    model_flops: Optional[float] = None
+    per_device_mem: Optional[float] = None
+
+    @property
+    def t_compute(self) -> float:
+        return self.hlo_flops / (self.chips * HW.PEAK_FLOPS)
+
+    @property
+    def t_memory(self) -> float:
+        return self.hlo_bytes / (self.chips * HW.HBM_BW)
+
+    @property
+    def t_collective(self) -> float:
+        # coll_bytes is already per-device; each chip drives its own links
+        return self.coll_bytes / HW.ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_ratio(self) -> Optional[float]:
+        if not self.model_flops:
+            return None
+        return self.model_flops / max(self.hlo_flops, 1.0)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of peak the step would achieve if the dominant term were
+        the runtime: t_compute / max(all terms)."""
+        t = max(self.t_compute, self.t_memory, self.t_collective)
+        return self.t_compute / t if t > 0 else 0.0
+
+    def row(self) -> str:
+        u = self.useful_ratio
+        return (f"{self.name:46s} {self.t_compute*1e3:10.2f} "
+                f"{self.t_memory*1e3:10.2f} {self.t_collective*1e3:10.2f} "
+                f"{self.bottleneck:10s} {self.roofline_fraction:6.2f} "
+                f"{'' if u is None else f'{u:6.2f}'}")
+
+
+def analyze(name: str, compiled, chips: int,
+            model_flops_val: Optional[float] = None) -> RooflineReport:
+    ca = compiled.cost_analysis() or {}
+    flops = float(ca.get("flops", 0.0))
+    byts = float(ca.get("bytes accessed", 0.0))
+    try:
+        hlo = compiled.as_text()
+    except Exception:
+        hlo = ""
+    coll = collective_bytes(hlo)
+    mem = None
+    try:
+        ma = compiled.memory_analysis()
+        mem = float(getattr(ma, "temp_size_in_bytes", 0)
+                    + getattr(ma, "argument_size_in_bytes", 0)
+                    + getattr(ma, "output_size_in_bytes", 0)
+                    - getattr(ma, "alias_size_in_bytes", 0))
+    except Exception:
+        pass
+    # cost_analysis flops on a partitioned module are per-device on CPU
+    # backend; normalize to GLOBAL flops for the compute term.
+    return RooflineReport(
+        name=name, chips=chips, hlo_flops=flops * chips, hlo_bytes=byts * chips,
+        coll_bytes=float(sum(coll.values())), coll_breakdown=coll,
+        model_flops=model_flops_val, per_device_mem=mem)
+
+
+# ---------------------------------------------------------------------------
+# MODEL_FLOPS: 6·N·D for training (N params, D tokens); 2·N·D for inference.
+# MoE: N = active params.
+# ---------------------------------------------------------------------------
+
+def count_params(cfg) -> tuple[float, float]:
+    """(total, active) parameter counts from the ArchConfig (analytic)."""
+    d, f, V, L = cfg.d_model, cfg.d_ff, cfg.vocab, cfg.n_layers
+    pre, pat, reps, suf = cfg.layer_kinds()
+    kinds = list(pre) + list(pat) * reps + list(suf)
+    total = active = 2 * V * d  # embed + unembed
+    for kind in kinds:
+        if kind.startswith("mla"):
+            m = cfg.mla
+            qk = m.qk_nope_dim + m.qk_rope_dim
+            attn = (d * m.q_lora_rank + m.q_lora_rank * cfg.n_heads * qk
+                    + d * (m.kv_lora_rank + m.qk_rope_dim)
+                    + m.kv_lora_rank * cfg.n_heads
+                    * (m.qk_nope_dim + m.v_head_dim)
+                    + cfg.n_heads * m.v_head_dim * d)
+        elif kind in ("rwkv", "rec"):
+            if kind == "rwkv":
+                attn = 5 * d * d + 2 * d * 64 + d * 32 * 6
+            else:
+                w = cfg.rec.lru_width or d
+                attn = 2 * d * w + 2 * w * w + w * d + cfg.rec.conv_width * w
+        else:
+            hd = cfg.hd
+            attn = d * cfg.n_heads * hd + 2 * d * cfg.n_kv_heads * hd \
+                + cfg.n_heads * hd * d
+        gated = 3 if cfg.mlp in ("swiglu", "geglu") else 2
+        if kind.endswith("_moe"):
+            e = cfg.moe
+            ffn_total = e.n_experts * gated * d * e.d_ff_expert \
+                + d * e.n_experts + e.n_shared * gated * d * e.d_ff_expert
+            ffn_active = (e.top_k + e.n_shared) * gated * d * e.d_ff_expert \
+                + d * e.n_experts
+        elif kind == "rwkv":
+            ffn_total = ffn_active = 2 * d * f + d * d
+        elif kind == "rec":
+            ffn_total = ffn_active = gated * d * f
+        else:
+            ffn_total = ffn_active = gated * d * f
+        total += attn + ffn_total
+        active += attn + ffn_active
+    return float(total), float(active)
+
+
+def model_flops(cfg, shape) -> float:
+    """6·N_active·D for train; 2·N_active·D_new for prefill/decode."""
+    _, active = count_params(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * active * tokens
+    return 2.0 * active * shape.global_batch  # decode: 1 token per sequence

@@ -1,0 +1,234 @@
+"""Analytic (trip-count-aware) roofline terms per (arch × shape × mesh).
+
+Why analytic: XLA-CPU ``cost_analysis`` counts every loop body ONCE (verified
+by calibration in EXPERIMENTS.md §Dry-run: a scan of 8 identical matmuls
+reports the flops of 1), and ``memory_analysis.temp_size_in_bytes`` sums
+nested-while temps without cross-iteration reuse (a 16-microbatch scan
+reports 16× one iteration). The dry-run therefore proves *shardability and
+compilability* and provides the collective inventory; the roofline *numbers*
+come from this module's explicit napkin math, which multiplies every loop by
+its real trip count. Cross-checks against the compiled artifact are recorded
+in EXPERIMENTS.md.
+
+All byte counts are PER DEVICE; flop counts are GLOBAL (the report divides by
+chip count).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from ..configs.base import ArchConfig
+from .analysis import count_params
+
+__all__ = ["StepCost", "train_cost", "prefill_cost", "decode_cost",
+           "cost_for"]
+
+_ADAM_STATE_B = 8       # m+v f32
+_ADAFACTOR_STATE_B = 0.1
+
+
+@dataclasses.dataclass
+class StepCost:
+    flops: float               # global
+    hbm_bytes: float           # per device
+    coll_bytes: float          # per device (through its ICI links)
+    mem_bytes: float           # per-device residency (params/opt/cache/act)
+    notes: dict
+
+
+def _mesh_sizes(mesh_shape: dict, cfg=None):
+    mp = mesh_shape.get("model", 1)
+    dp = 1
+    for k, v in mesh_shape.items():
+        if k != "model":
+            dp *= v
+    if cfg is not None and getattr(cfg, "pure_dp", False):
+        dp, mp = dp * mp, 1
+    return dp, mp
+
+
+def _layer_list(cfg: ArchConfig):
+    pre, pat, reps, suf = cfg.layer_kinds()
+    return list(pre) + list(pat) * reps + list(suf)
+
+
+def _attn_flops_fwd(cfg: ArchConfig, kind: str, B: int, S: int,
+                    T: int | None = None) -> float:
+    """Score+PV einsum flops for the chunked schedule (full masked rectangle
+    — the causal-optimal half is a known 2x headroom, noted in §Perf)."""
+    T = S if T is None else T
+    if kind.startswith("mla"):
+        m = cfg.mla
+        qk, vd = m.qk_nope_dim + m.qk_rope_dim, m.v_head_dim
+        return 2.0 * B * S * T * cfg.n_heads * (qk + vd)
+    if kind == "rwkv":
+        C = cfg.rec.chunk
+        H = cfg.d_model // cfg.rec.head_dim
+        dk = cfg.rec.head_dim
+        # per chunk: scores C·C·dk + out C·C·dk + carry C·dk·dk, × S/C chunks
+        return 2.0 * B * (S / C) * H * (2 * C * C * dk + 2 * C * dk * dk)
+    if kind == "rec":
+        w = cfg.rec.lru_width or cfg.d_model
+        return 10.0 * B * S * w          # gates + scan (element-wise)
+    eff_T = min(T, cfg.window) if kind == "attn_local" and cfg.window else T
+    return 4.0 * B * S * eff_T * cfg.n_heads * cfg.hd
+
+
+def _linear_flops_fwd(cfg: ArchConfig, tokens: float) -> float:
+    """2·N·tokens over matmul params (excludes attention quadratic part)."""
+    _, active = count_params(cfg)
+    return 2.0 * active * tokens
+
+
+def _param_local_bytes(cfg: ArchConfig, dp: int, mp: int) -> float:
+    """Per-device parameter bytes. Dense/attn params shard over mp (where
+    divisible — approximate with full mp); MoE experts additionally over dp."""
+    total, _ = count_params(cfg)
+    if cfg.moe:
+        e = cfg.moe
+        kinds = _layer_list(cfg)
+        n_moe = sum(1 for k in kinds if k.endswith("_moe"))
+        gated = 3
+        expert_params = n_moe * e.n_experts * gated * cfg.d_model \
+            * e.d_ff_expert
+        rest = total - expert_params
+        return 2.0 * (expert_params / (dp * mp) + rest / mp)
+    return 2.0 * total / mp
+
+
+def _act_io_per_layer(cfg: ArchConfig, tok_local: float) -> float:
+    """HBM traffic of one layer forward on one device (bf16), coarse:
+    ~14 activation-tensor reads/writes of [tok, d] plus mixer temps."""
+    return 14.0 * 2.0 * tok_local * cfg.d_model
+
+
+def train_cost(cfg: ArchConfig, B: int, S: int, mesh_shape: dict) -> StepCost:
+    dp, mp = _mesh_sizes(mesh_shape, cfg)
+    chips = dp * mp
+    tokens = float(B) * S
+    n_micro = max(1, B // cfg.microbatch)
+    mb_tok = tokens / n_micro
+    tok_local = mb_tok / dp
+    L = cfg.n_layers
+    kinds = _layer_list(cfg)
+
+    lin_fwd = _linear_flops_fwd(cfg, tokens)
+    attn_fwd = sum(_attn_flops_fwd(cfg, k, B / n_micro, S) for k in kinds) \
+        * n_micro
+    # full remat: fwd + replay + bwd(2x)  =>  4x fwd
+    flops = 4.0 * (lin_fwd + attn_fwd)
+
+    pb = _param_local_bytes(cfg, dp, mp)
+    total, _ = count_params(cfg)
+    acc_b = 2 if cfg.grad_accum_dtype == "bfloat16" else 4
+    state_b = _ADAFACTOR_STATE_B if cfg.optimizer == "adafactor" \
+        else _ADAM_STATE_B
+    gdiv = (dp * mp if cfg.pure_dp else dp) if cfg.zero1 else 1  # ZeRO-1
+    bdiv = mp if cfg.seq_parallel else 1            # SP: boundaries over mp
+    hbm = 0.0
+    hbm += 3.0 * pb * n_micro                       # weight reads fwd/replay/bwd
+    hbm += 2.0 * (pb / 2 * acc_b / gdiv) * n_micro  # grad accum read+write
+    hbm += pb + (pb / 2 / gdiv) * (2 * state_b + acc_b) + pb   # optimizer
+    hbm += sum(_act_io_per_layer(cfg, tok_local) for _ in range(L)) \
+        * n_micro * 2.0                             # fwd + replay (bwd ~ fwd)
+
+    # collectives per device
+    coll = 0.0
+    # grad sync over dp: all-reduce (2x) or reduce-scatter+all-gather w/ ZeRO
+    coll += 2.0 * (pb / 2 * acc_b)
+    # model-parallel activation psums: 2 per layer, fwd+replay+bwd; with SP
+    # each psum pair becomes all-gather+reduce-scatter (half the bytes)
+    sp_f = 0.5 if cfg.seq_parallel else 1.0
+    coll += (0.0 if mp == 1 else
+             3.0 * 2.0 * L * 2.0 * 2.0 * tok_local * cfg.d_model * sp_f) \
+        * n_micro
+    if cfg.moe:
+        e = cfg.moe
+        n_moe = sum(1 for k in kinds if k.endswith("_moe"))
+        # EP all-to-all: each device ships its local routed tokens out and
+        # the results back (dispatch + combine), fwd + replay + bwd
+        disp_b = 1.0 if e.dispatch_dtype != "bfloat16" else 2.0
+        # dispatch leg (disp_b bytes) + combine leg (bf16)
+        moe_bytes = (tok_local * e.top_k * e.capacity_factor
+                     * cfg.d_model) * (disp_b + 2.0)
+        if e.n_groups and e.group_top:
+            # node-limited routing: destinations span group_top/n_groups of
+            # the EP axis -> proportionally fewer contended torus hops
+            # (egress volume is unchanged; this models link sharing)
+            moe_bytes *= e.group_top / e.n_groups
+        coll += 3.0 * n_moe * moe_bytes * n_micro
+    mem = pb + (pb / 2 / gdiv) * (acc_b + state_b) \
+        + 2.0 * 2.0 * tok_local * cfg.d_model * L / bdiv  # saved boundaries
+    return StepCost(flops=flops, hbm_bytes=hbm, coll_bytes=coll,
+                    mem_bytes=mem,
+                    notes={"n_micro": n_micro, "dp": dp, "mp": mp,
+                           "param_local_gb": pb / 1e9})
+
+
+def prefill_cost(cfg: ArchConfig, B: int, S: int, mesh_shape: dict
+                 ) -> StepCost:
+    dp, mp = _mesh_sizes(mesh_shape, cfg)
+    tokens = float(B) * S
+    tok_local = tokens / dp
+    kinds = _layer_list(cfg)
+    flops = _linear_flops_fwd(cfg, tokens) \
+        + sum(_attn_flops_fwd(cfg, k, B, S) for k in kinds)
+    pb = _param_local_bytes(cfg, dp, mp)
+    hbm = pb + sum(_act_io_per_layer(cfg, tok_local) for _ in kinds)
+    coll = 0.0 if mp == 1 else 2.0 * len(kinds) * 2.0 * 2.0 * tok_local \
+        * cfg.d_model
+    if cfg.moe:
+        n_moe = sum(1 for k in kinds if k.endswith("_moe"))
+        coll += n_moe * 2.0 * 2.0 * tokens / dp * cfg.d_model
+    return StepCost(flops=flops, hbm_bytes=hbm, coll_bytes=coll,
+                    mem_bytes=pb + 2 * 2 * tok_local * cfg.d_model,
+                    notes={"dp": dp, "mp": mp})
+
+
+def _cache_local_bytes(cfg: ArchConfig, B: int, T: int, dp: int, mp: int
+                       ) -> float:
+    kinds = _layer_list(cfg)
+    cb = 2 if cfg.kv_cache_dtype != "int8" else 1
+    total = 0.0
+    for k in kinds:
+        if k.startswith("mla"):
+            m = cfg.mla
+            total += B * T * (m.kv_lora_rank + m.qk_rope_dim) * cb
+        elif k == "rwkv":
+            H = cfg.d_model // cfg.rec.head_dim
+            total += B * H * cfg.rec.head_dim ** 2 * 4
+        elif k == "rec":
+            w = cfg.rec.lru_width or cfg.d_model
+            total += B * w * 4 * cfg.rec.conv_width
+        else:
+            Tk = min(T, cfg.window) if k == "attn_local" and cfg.window else T
+            total += 2 * B * Tk * cfg.n_kv_heads * cfg.hd * cb
+    bdiv = dp if B % dp == 0 else 1
+    if cfg.shard_cache_t:
+        bdiv *= mp
+    return total / bdiv
+
+
+def decode_cost(cfg: ArchConfig, B: int, T: int, mesh_shape: dict) -> StepCost:
+    dp, mp = _mesh_sizes(mesh_shape, cfg)
+    kinds = _layer_list(cfg)
+    flops = _linear_flops_fwd(cfg, float(B)) \
+        + sum(_attn_flops_fwd(cfg, k, B, 1, T=T) for k in kinds)
+    pb = _param_local_bytes(cfg, dp, mp)
+    cache = _cache_local_bytes(cfg, B, T, dp, mp)
+    hbm = pb + cache          # read all weights + whole cache, write 1 slot
+    coll = 0.0 if mp == 1 else 2.0 * len(kinds) * 2.0 * 2.0 \
+        * (B / (dp if B % dp == 0 else 1)) * cfg.d_model
+    return StepCost(flops=flops, hbm_bytes=hbm, coll_bytes=coll,
+                    mem_bytes=pb + cache,
+                    notes={"dp": dp, "mp": mp, "cache_local_gb": cache / 1e9})
+
+
+def cost_for(cfg: ArchConfig, shape, mesh_shape: dict) -> StepCost:
+    if shape.kind == "train":
+        return train_cost(cfg, shape.global_batch, shape.seq_len, mesh_shape)
+    if shape.kind == "prefill":
+        return prefill_cost(cfg, shape.global_batch, shape.seq_len,
+                            mesh_shape)
+    return decode_cost(cfg, shape.global_batch, shape.seq_len, mesh_shape)

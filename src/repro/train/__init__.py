@@ -1,0 +1,8 @@
+from .checkpoint import (save_checkpoint, restore_checkpoint, latest_step,
+                         list_checkpoints)
+from .elastic import RunState, run_with_restarts, elastic_pagerank_resume
+from .loop import train
+
+__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step",
+           "list_checkpoints", "RunState", "run_with_restarts",
+           "elastic_pagerank_resume", "train"]

@@ -1,0 +1,57 @@
+"""End-to-end training loop: data -> jitted train_step -> checkpoint/restart.
+
+Used by examples/train_lm.py (runnable on CPU with a smoke config) and by
+launch/train.py (mesh-sharded). The loop is restart-safe: step index, params,
+optimizer state and PRNG are in the checkpoint; data is seekable by step.
+"""
+from __future__ import annotations
+
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ArchConfig
+from ..data.pipeline import batch_for
+from ..models import LMModel
+from .checkpoint import latest_step, restore_checkpoint, save_checkpoint
+
+__all__ = ["train"]
+
+
+def train(cfg: ArchConfig, *, steps: int, batch: int, seq: int,
+          ckpt_dir: Optional[str] = None, ckpt_every: int = 100,
+          mesh=None, log_every: int = 10, seed: int = 0,
+          fail_at: Optional[int] = None):
+    """Returns (params, metrics_history). `fail_at` injects one simulated
+    failure (tested in tests/test_checkpoint.py)."""
+    model = LMModel(cfg, mesh=mesh)
+    params = model.init_params(jax.random.key(seed))
+    opt = model.init_opt(params)
+    start = 0
+    if ckpt_dir and latest_step(ckpt_dir) is not None:
+        (params, opt), extra, start = restore_checkpoint(
+            ckpt_dir, (params, opt))
+    step_fn = jax.jit(model.train_step, donate_argnums=(0, 1))
+    history = []
+    failed = False
+    t0 = time.time()
+    s = start
+    while s < steps:
+        b = {k: jnp.asarray(v) for k, v in
+             batch_for(cfg, batch, seq, s, seed).items()}
+        if fail_at is not None and s == fail_at and not failed:
+            failed = True
+            raise RuntimeError(f"injected failure at step {s}")
+        params, opt, metrics = step_fn(params, opt, b)
+        s += 1
+        if s % log_every == 0 or s == steps:
+            m = {k: float(v) for k, v in metrics.items()}
+            m["step"] = s
+            m["sec"] = time.time() - t0
+            history.append(m)
+        if ckpt_dir and (s % ckpt_every == 0 or s == steps):
+            save_checkpoint(ckpt_dir, s, (params, opt))
+    return params, history

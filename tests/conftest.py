@@ -1,0 +1,13 @@
+import jax
+import pytest
+
+# f64 ranks (paper uses 64-bit ranks; τ = 1e-10 is below f32 resolution).
+# NOTE: we intentionally do NOT set XLA_FLAGS device-count here — smoke tests
+# and benches must see the real single device; only launch/dryrun.py forces 512.
+jax.config.update("jax_enable_x64", True)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    import numpy as np
+    return np.random.default_rng(0)

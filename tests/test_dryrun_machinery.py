@@ -1,0 +1,109 @@
+"""Dry-run plumbing on a local (1,1) mesh with smoke configs: the same
+jit + in_shardings + lower + compile + cost/memory analysis path the 512-dev
+campaign uses, kept cheap enough for CI."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, get_config, smoke_config
+from repro.models import LMModel
+from repro.models.model import batch_specs, cache_specs, param_specs
+from repro.roofline.analysis import analyze, collective_bytes
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def _ns(mesh, tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+@pytest.mark.parametrize("name", ["qwen2-1.5b", "deepseek-v3-671b",
+                                  "recurrentgemma-2b"])
+def test_lower_train_cell_smoke(name, mesh):
+    cfg = smoke_config(get_config(name))
+    model = LMModel(cfg, mesh=mesh)
+    ap = model.abstract_params()
+    ps = param_specs(cfg, ap, mesh)
+    aopt = jax.eval_shape(model.init_opt, ap)
+    os_ = model.opt_partition(ps)
+    bshapes, bspecs = batch_specs(cfg, mesh, 4, 64)
+    with mesh:
+        fn = jax.jit(model.train_step,
+                     in_shardings=(_ns(mesh, ps), _ns(mesh, os_),
+                                   _ns(mesh, bspecs)),
+                     donate_argnums=(0, 1))
+        compiled = fn.lower(ap, aopt, bshapes).compile()
+    ca = compiled.cost_analysis()
+    assert ca.get("flops", 0) > 0
+    rep = analyze("t", compiled, 1, 1.0)
+    assert rep.hlo_flops > 0
+
+
+@pytest.mark.parametrize("name", ["gemma2-9b", "rwkv6-1.6b"])
+def test_lower_decode_cell_smoke(name, mesh):
+    cfg = smoke_config(get_config(name))
+    model = LMModel(cfg, mesh=mesh)
+    ap = model.abstract_params()
+    ps = param_specs(cfg, ap, mesh)
+    bshapes, bspecs = batch_specs(cfg, mesh, 4, 1, decode=True)
+    cshape, cspecs = cache_specs(cfg, mesh, 4, 32)
+    with mesh:
+        fn = jax.jit(model.decode_step,
+                     in_shardings=(_ns(mesh, ps), _ns(mesh, cspecs),
+                                   _ns(mesh, bspecs), None),
+                     out_shardings=(None, _ns(mesh, cspecs)),
+                     donate_argnums=(1,))
+        compiled = fn.lower(ap, cshape, bshapes,
+                            jax.ShapeDtypeStruct((), jnp.int32)).compile()
+    assert compiled.memory_analysis() is not None
+
+
+def test_int8_cache_and_t_sharding_lower(mesh):
+    import dataclasses
+    cfg = dataclasses.replace(smoke_config(get_config("gemma2-9b")),
+                              kv_cache_dtype="int8", shard_cache_t=True)
+    model = LMModel(cfg, mesh=mesh)
+    ap = model.abstract_params()
+    ps = param_specs(cfg, ap, mesh)
+    bshapes, bspecs = batch_specs(cfg, mesh, 2, 1, decode=True)
+    cshape, cspecs = cache_specs(cfg, mesh, 2, 32)
+    leaves = jax.tree.leaves(cshape)
+    assert any(l.dtype == jnp.int8 for l in leaves)
+    with mesh:
+        compiled = jax.jit(
+            model.decode_step,
+            in_shardings=(_ns(mesh, ps), _ns(mesh, cspecs),
+                          _ns(mesh, bspecs), None)).lower(
+            ap, cshape, bshapes, jax.ShapeDtypeStruct((), jnp.int32)
+        ).compile()
+    assert compiled is not None
+
+
+def test_int8_decode_matches_bf16_closely():
+    """Quantized cache decode must stay close to the fp cache decode."""
+    import dataclasses
+    from repro.models import transformer as tfm
+    base = smoke_config(get_config("qwen2-1.5b"))
+    q = dataclasses.replace(base, kv_cache_dtype="int8")
+    rng = np.random.default_rng(0)
+    toks = jnp.asarray(rng.integers(0, base.vocab, (2, 10)), jnp.int32)
+    outs = {}
+    for cfg in (base, q):
+        m = LMModel(cfg)
+        params = m.init_params(jax.random.key(5))
+        cache = tfm.init_cache(cfg, 2, 10)
+        step = jax.jit(m.decode_step)
+        for t in range(10):
+            logits, cache = step(params, cache, {"tokens": toks[:, t:t + 1]},
+                                 jnp.asarray(t, jnp.int32))
+        outs[cfg.kv_cache_dtype] = np.asarray(logits)
+    # int8 quantization noise is bounded; argmax should agree
+    assert np.mean(np.argmax(outs["int8"], -1)
+                   == np.argmax(outs["bfloat16"], -1)) > 0.9

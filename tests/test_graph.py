@@ -1,0 +1,93 @@
+"""Unit tests: host graph construction, batches, hybrid layout (Alg. 4)."""
+import numpy as np
+import pytest
+
+from repro.core import (BatchUpdate, apply_batch, build_graph, build_hybrid,
+                        powerlaw_graph, random_batch, random_graph,
+                        temporal_stream)
+from repro.core.partition import partition_by_degree, partition_by_degree_jax
+
+
+def test_self_loops_no_dead_ends():
+    g = random_graph(100, 300, seed=0)
+    assert np.all(g.out_degree() >= 1)
+    for v in (0, 17, 99):
+        assert g.has_edge(v, v)
+
+
+def test_transpose_consistency():
+    g = random_graph(200, 1000, seed=1)
+    src, dst = g.edges()
+    # rebuild in-degree from forward edges
+    indeg = np.bincount(dst, minlength=g.n)
+    assert np.array_equal(indeg, g.in_degree())
+    assert g.m == g.targets.shape[0] == g.t_sources.shape[0]
+
+
+def test_apply_batch_insert_delete():
+    g = random_graph(50, 200, seed=2)
+    b = random_batch(g, 0.1, seed=3)
+    g2 = apply_batch(g, b)
+    for u, v in zip(b.ins_src, b.ins_dst):
+        assert g2.has_edge(int(u), int(v))
+    for u, v in zip(b.del_src, b.del_dst):
+        if int(u) != int(v) and not np.any((b.ins_src == u) & (b.ins_dst == v)):
+            assert not g2.has_edge(int(u), int(v))
+    assert np.all(g2.out_degree() >= 1)  # self-loops survive
+
+
+def test_batch_mix_ratio():
+    g = random_graph(300, 5000, seed=4)
+    b = random_batch(g, 0.01, insert_frac=0.8, seed=5)
+    assert b.ins_src.shape[0] == round(0.8 * round(0.01 * g.m))
+
+
+def test_partition_matches_alg4_semantics():
+    g = powerlaw_graph(500, 4000, seed=6)
+    indeg = g.in_degree()
+    perm, n_low = partition_by_degree(indeg, 16)
+    assert sorted(perm.tolist()) == list(range(g.n))  # a permutation
+    assert np.all(indeg[perm[:n_low]] <= 16)
+    assert np.all(indeg[perm[n_low:]] > 16)
+    # stability (paper's scan keeps id order within each side)
+    assert np.all(np.diff(perm[:n_low]) > 0)
+    assert np.all(np.diff(perm[n_low:]) > 0)
+
+
+def test_partition_jax_matches_numpy():
+    g = powerlaw_graph(300, 2500, seed=7)
+    indeg = g.in_degree()
+    perm_np, n_low_np = partition_by_degree(indeg, 8)
+    perm_j, n_low_j = partition_by_degree_jax(indeg, 8)
+    assert int(n_low_j) == n_low_np
+    assert np.array_equal(np.asarray(perm_j), perm_np)
+
+
+def test_hybrid_layout_covers_all_edges():
+    g = powerlaw_graph(400, 3000, seed=8)
+    lay = build_hybrid(g, d_p=8, tile=32)
+    # total real edges across ELL + tiles equals |E|
+    total = int(lay.ell_mask.sum() + lay.hi_tmask.sum())
+    assert total == g.m
+    # ELL rows of high-degree vertices are fully masked out
+    hi = np.nonzero(~lay.is_low)[0]
+    assert lay.ell_mask[hi].sum() == 0
+    # every high vertex id appears once in hi_ids
+    assert set(lay.hi_ids[lay.hi_ids < g.n].tolist()) == set(hi.tolist())
+
+
+def test_hybrid_capacity_padding():
+    g = powerlaw_graph(200, 1500, seed=9)
+    lay0 = build_hybrid(g, d_p=8, tile=32)
+    lay = build_hybrid(g, d_p=8, tile=32,
+                       n_hi_cap=lay0.n_hi_cap + 7,
+                       t_cap=lay0.hi_tiles.shape[0] + 5)
+    assert lay.hi_ids.shape[0] == lay0.n_hi_cap + 7
+    assert int(lay.hi_tmask.sum()) == int(lay0.hi_tmask.sum())
+
+
+def test_temporal_stream_protocol():
+    base, batches = temporal_stream(100, 2000, n_batches=10, seed=10)
+    assert len(batches) == 10
+    assert all(b.del_src.size == 0 for b in batches)  # insertion-only stream
+    assert base.m >= 100  # self-loops at minimum

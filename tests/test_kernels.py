@@ -1,0 +1,144 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs ref.py oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import device_graph, init_ranks, powerlaw_graph, pull_sum, static_pagerank
+from repro.kernels import ref as kref
+from repro.kernels.csr_block import csr_block_pull
+from repro.kernels.ell_pull import ell_pull
+from repro.kernels.linf_delta import linf_delta
+from repro.kernels.ops import pull_sum_kernels, update_ranks_kernel
+from repro.kernels.pr_update import pr_update
+
+
+@pytest.mark.parametrize("n,d_p,vt", [(100, 4, 32), (257, 8, 64),
+                                      (1000, 16, 512), (64, 4, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.float64])
+def test_ell_pull_sweep(n, d_p, vt, dtype, rng):
+    idx = jnp.asarray(rng.integers(0, n, size=(n, d_p)), jnp.int32)
+    mask = jnp.asarray(rng.random((n, d_p)) < 0.7, jnp.float32)
+    c = jnp.asarray(rng.random(n), dtype)
+    out = ell_pull(c, idx, mask, vt=vt)
+    ref = kref.ell_pull_ref(c, idx, mask)
+    tol = 1e-5 if dtype == jnp.float32 else 1e-12
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=tol)
+    assert out.dtype == c.dtype
+
+
+@pytest.mark.parametrize("t_cap,tile,n_rows", [(8, 16, 3), (33, 8, 7),
+                                               (64, 128, 16)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.float64])
+def test_csr_block_pull_sweep(t_cap, tile, n_rows, dtype, rng):
+    n = 500
+    tiles = jnp.asarray(rng.integers(0, n, size=(t_cap, tile)), jnp.int32)
+    tmask = jnp.asarray(rng.random((t_cap, tile)) < 0.5, jnp.float32)
+    rowmap = jnp.asarray(rng.integers(0, n_rows, size=t_cap), jnp.int32)
+    c = jnp.asarray(rng.random(n), dtype)
+    out = csr_block_pull(c, tiles, tmask, rowmap, n_rows)
+    ref = kref.csr_block_pull_ref(c, tiles, tmask, rowmap, n_rows)
+    tol = 1e-4 if dtype == jnp.float32 else 1e-12
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=tol)
+
+
+@pytest.mark.parametrize("n,vt", [(100, 64), (1025, 256)])
+@pytest.mark.parametrize("prune,closed_form", [(True, True), (False, False),
+                                               (True, False)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.float64])
+def test_pr_update_sweep(n, vt, prune, closed_form, dtype, rng):
+    contrib = jnp.asarray(rng.random(n), dtype) * 0.01
+    r = jnp.asarray(rng.random(n), dtype) * 0.01 + 1e-4
+    deg = jnp.asarray(rng.integers(1, 40, size=n), jnp.int32)
+    aff = jnp.asarray(rng.random(n) < 0.6, dtype)
+    kw = dict(alpha=0.85, inv_n=1.0 / n, tau_f=1e-4, tau_p=1e-4,
+              prune=prune, closed_form=closed_form)
+    rk, ak, dk, mk = pr_update(contrib, r, deg, aff, vt=vt, **kw)
+    rr, ar, dr_, mr = kref.pr_update_ref(contrib, r, deg, aff, **kw)
+    tol = 1e-6 if dtype == jnp.float32 else 1e-14
+    np.testing.assert_allclose(np.asarray(rk), np.asarray(rr), atol=tol)
+    np.testing.assert_array_equal(np.asarray(ak), np.asarray(ar))
+    np.testing.assert_array_equal(np.asarray(dk), np.asarray(dr_))
+    np.testing.assert_allclose(float(mk), float(mr), atol=tol)
+
+
+@pytest.mark.parametrize("n,vt", [(10, 8), (1000, 128), (4096, 2048)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.float64])
+def test_linf_delta_sweep(n, vt, dtype, rng):
+    a = jnp.asarray(rng.standard_normal(n), dtype)
+    b = jnp.asarray(rng.standard_normal(n), dtype)
+    out = linf_delta(a, b, vt=vt)
+    np.testing.assert_allclose(float(out), float(kref.linf_delta_ref(a, b)),
+                               rtol=1e-6)
+
+
+def test_kernel_pull_matches_core_pull():
+    g = powerlaw_graph(500, 4000, seed=5)
+    dg = device_graph(g, d_p=8, tile=64)
+    c = init_ranks(g.n) / dg.out_deg.astype(jnp.float64)
+    a = pull_sum(dg, c)
+    b = pull_sum_kernels(dg, c, vt=128)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-14)
+
+
+def test_static_pagerank_with_kernel_backend_identical():
+    g = powerlaw_graph(300, 2500, seed=6)
+    dg = device_graph(g, d_p=8, tile=64)
+    r_j, it_j = static_pagerank(dg, init_ranks(g.n))
+    r_k, it_k = static_pagerank(
+        dg, init_ranks(g.n),
+        pull_sum_fn=lambda d, c: pull_sum_kernels(d, c, vt=128))
+    assert int(it_j) == int(it_k)
+    np.testing.assert_allclose(np.asarray(r_j), np.asarray(r_k), atol=1e-15)
+
+
+def test_update_ranks_kernel_contract():
+    g = powerlaw_graph(200, 1500, seed=7)
+    dg = device_graph(g, d_p=8, tile=64)
+    r = init_ranks(g.n)
+    aff = jnp.ones(g.n, jnp.bool_)
+    from repro.core.pagerank import update_ranks
+    out_core = update_ranks(dg, r, aff, alpha=0.85, tau_f=1e-6, tau_p=1e-6,
+                            prune=True, closed_form=True, track_frontier=True)
+    out_kern = update_ranks_kernel(dg, r, aff, alpha=0.85, tau_f=1e-6,
+                                   tau_p=1e-6, prune=True, closed_form=True,
+                                   track_frontier=True)
+    np.testing.assert_allclose(np.asarray(out_core[0]),
+                               np.asarray(out_kern[0]), atol=1e-14)
+    np.testing.assert_array_equal(np.asarray(out_core[1]),
+                                  np.asarray(out_kern[1]))
+    np.testing.assert_array_equal(np.asarray(out_core[2]),
+                                  np.asarray(out_kern[2]))
+
+
+@pytest.mark.parametrize("S,T,D,bq,bk", [(64, 64, 16, 16, 16),
+                                         (128, 128, 32, 64, 32),
+                                         (32, 32, 8, 32, 32)])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_sweep(S, T, D, bq, bk, causal, rng):
+    from repro.kernels.flash_attn import flash_attention
+    q = jnp.asarray(rng.standard_normal((4, S, D)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((4, T, D)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((4, T, D)), jnp.float32)
+    out = flash_attention(q, k, v, bq=bq, bk=bk, causal=causal)
+    ref = kref.flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_flash_attention_matches_model_chunked_schedule(rng):
+    """The Pallas kernel and the model's jnp chunked attention agree."""
+    from repro.kernels.flash_attn import flash_attention
+    from repro.models.attention import chunked_attention
+    B, S, H, D = 2, 64, 4, 16
+    q = jnp.asarray(rng.standard_normal((B, S, H, D)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, S, H, D)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, S, H, D)), jnp.float32)
+    jnp_out = chunked_attention(q, k, v, chunk=16)
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, S, D)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * H, S, D)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * H, S, D)
+    pl_out = flash_attention(qf, kf, vf, bq=16, bk=16).reshape(
+        B, H, S, D).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(jnp_out), np.asarray(pl_out),
+                               atol=3e-3, rtol=3e-3)

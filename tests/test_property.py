@@ -1,0 +1,99 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (BatchUpdate, apply_batch, build_graph, device_graph,
+                        init_ranks, pull_sum, random_graph, static_pagerank)
+from repro.core.partition import partition_by_degree
+from repro.roofline.analysis import collective_bytes
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+@given(n=st.integers(5, 60), m=st.integers(0, 200), seed=st.integers(0, 99))
+@settings(**SETTINGS)
+def test_graph_invariants(n, m, seed):
+    rng = np.random.default_rng(seed)
+    g = build_graph(n, rng.integers(0, n, m), rng.integers(0, n, m))
+    # self-loops guarantee no dead ends
+    assert np.all(g.out_degree() >= 1)
+    # |in-edges| == |out-edges|
+    assert g.targets.shape == g.t_sources.shape
+    assert int(g.in_degree().sum()) == int(g.out_degree().sum()) == g.m
+
+
+@given(n=st.integers(2, 200), d_p=st.integers(0, 50), seed=st.integers(0, 9))
+@settings(**SETTINGS)
+def test_partition_is_stable_permutation(n, d_p, seed):
+    deg = np.random.default_rng(seed).integers(0, 64, n)
+    perm, n_low = partition_by_degree(deg, d_p)
+    assert sorted(perm.tolist()) == list(range(n))
+    assert np.all(deg[perm[:n_low]] <= d_p)
+    assert np.all(deg[perm[n_low:]] > d_p)
+
+
+@given(n=st.integers(8, 80), m=st.integers(10, 300), seed=st.integers(0, 9),
+       alpha=st.floats(0.5, 0.95))
+@settings(max_examples=10, deadline=None)
+def test_pagerank_is_probability_vector(n, m, seed, alpha):
+    from repro.core.pagerank import PRParams
+    g = random_graph(n, m, seed=seed)
+    dg = device_graph(g, d_p=4, tile=16)
+    r, _ = static_pagerank(dg, init_ranks(g.n),
+                           PRParams(alpha=alpha, tau=1e-9, max_iter=200))
+    r = np.asarray(r)
+    assert np.all(r > 0)
+    assert abs(r.sum() - 1.0) < 1e-6
+
+
+@given(n=st.integers(8, 60), m=st.integers(10, 150), seed=st.integers(0, 9))
+@settings(max_examples=10, deadline=None)
+def test_pull_sum_equals_dense_matvec(n, m, seed):
+    """pull_sum over the hybrid layout == A^T c with the dense adjacency."""
+    g = random_graph(n, m, seed=seed)
+    dg = device_graph(g, d_p=4, tile=8)
+    rng = np.random.default_rng(seed)
+    c = rng.random(n)
+    dense = np.zeros((n, n))
+    src, dst = g.edges()
+    dense[src, dst] = 1.0
+    want = dense.T @ c
+    got = np.asarray(pull_sum(dg, jnp.asarray(c)))
+    np.testing.assert_allclose(got, want, atol=1e-9)
+
+
+@given(ins=st.integers(0, 30), dels=st.integers(0, 30),
+       seed=st.integers(0, 9))
+@settings(max_examples=15, deadline=None)
+def test_apply_batch_monotone_edges(ins, dels, seed):
+    rng = np.random.default_rng(seed)
+    g = random_graph(40, 200, seed=seed)
+    src, dst = g.edges()
+    nl = src != dst
+    k = min(dels, int(nl.sum()))
+    b = BatchUpdate(del_src=src[nl][:k], del_dst=dst[nl][:k],
+                    ins_src=rng.integers(0, 40, ins).astype(np.int32),
+                    ins_dst=rng.integers(0, 40, ins).astype(np.int32))
+    g2 = apply_batch(g, b)
+    assert np.all(g2.out_degree() >= 1)
+    for u, v in zip(b.ins_src, b.ins_dst):
+        assert g2.has_edge(int(u), int(v))
+
+
+def test_collective_bytes_parser():
+    hlo = """
+  %ag = bf16[8,128]{1,0} all-gather(bf16[1,128]{1,0} %x), replica_groups={}
+  %ar = f32[256]{0} all-reduce(f32[256]{0} %y), to_apply=%add
+  %rs = f32[4]{0} reduce-scatter(f32[16]{0} %z), dimensions={0}
+  %a2a = (f32[2,4]{1,0}, f32[2,4]{1,0}) all-to-all(f32[2,4]{1,0} %a, f32[2,4]{1,0} %b)
+  %cp = u8[64]{0} collective-permute(u8[64]{0} %c)
+  %notacoll = f32[9]{0} add(f32[9]{0} %p, f32[9]{0} %q)
+"""
+    out = collective_bytes(hlo)
+    assert out["all-gather"] == 8 * 128 * 2
+    assert out["all-reduce"] == 256 * 4
+    assert out["reduce-scatter"] == 4 * 4
+    assert out["all-to-all"] == 2 * 2 * 4 * 4
+    assert out["collective-permute"] == 64

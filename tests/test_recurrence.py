@@ -1,0 +1,78 @@
+"""Recurrence math: chunked RWKV-6 wkv and associative-scan RG-LRU vs naive
+sequential references (beyond the decode-parity integration tests)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.ssm import _wkv_chunk
+
+
+def _naive_wkv(r, k, v, wlog, u, s0):
+    """o_t = r_t · (S_{t-1} + u ⊙ k_t ⊗ v_t);  S_t = w_t ⊙ S_{t-1} + k_t ⊗ v_t."""
+    B, C, H, dk = r.shape
+    s = np.asarray(s0, np.float64).copy()
+    outs = np.zeros((B, C, H, dk))
+    rn, kn, vn = (np.asarray(x, np.float64) for x in (r, k, v))
+    wn = np.exp(np.asarray(wlog, np.float64))
+    un = np.asarray(u, np.float64)
+    for t in range(C):
+        kv = np.einsum("bhk,bhv->bhkv", kn[:, t], vn[:, t])
+        outs[:, t] = np.einsum("bhk,bhkv->bhv", rn[:, t],
+                               s + un[None, :, :, None] * kv)
+        s = wn[:, t][..., None] * s + kv
+    return outs, s
+
+
+@pytest.mark.parametrize("C,H,dk", [(4, 2, 4), (8, 3, 8), (16, 1, 16)])
+def test_wkv_chunk_matches_naive_recurrence(C, H, dk, rng):
+    B = 2
+    r = jnp.asarray(rng.standard_normal((B, C, H, dk)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, C, H, dk)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, C, H, dk)), jnp.float32)
+    wlog = -jnp.asarray(rng.random((B, C, H, dk)), jnp.float32) * 2.0
+    u = jnp.asarray(rng.standard_normal((H, dk)), jnp.float32)
+    s0 = jnp.asarray(rng.standard_normal((B, H, dk, dk)), jnp.float32) * 0.1
+    o, s1 = _wkv_chunk(r, k, v, wlog, u, s0)
+    o_ref, s_ref = _naive_wkv(r, k, v, wlog, u, s0)
+    np.testing.assert_allclose(np.asarray(o), o_ref, atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(s1), s_ref, atol=1e-4, rtol=1e-4)
+
+
+def test_rwkv_chunk_size_invariance(rng):
+    """Chunk length is a tiling choice; outputs must not depend on it."""
+    import dataclasses
+    from repro.configs import get_config, smoke_config
+    from repro.models.ssm import rwkv_init, rwkv_time_mix
+    cfg8 = smoke_config(get_config("rwkv6-1.6b"))
+    cfg4 = dataclasses.replace(cfg8, rec=dataclasses.replace(cfg8.rec,
+                                                             chunk=4))
+    p = rwkv_init(jax.random.key(0), cfg8, jnp.float32)
+    x = jnp.asarray(rng.standard_normal((2, 16, cfg8.d_model)), jnp.float32)
+    o8, (x8, s8) = rwkv_time_mix(x, p, cfg8)
+    o4, (x4, s4) = rwkv_time_mix(x, p, cfg4)
+    np.testing.assert_allclose(np.asarray(o8), np.asarray(o4), atol=1e-4,
+                               rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(s8), np.asarray(s4), atol=1e-3,
+                               rtol=1e-3)
+
+
+def test_rglru_assoc_scan_matches_sequential(rng):
+    from repro.configs import get_config, smoke_config
+    from repro.models.ssm import (rglru_apply, rglru_decode, rglru_init,
+                                  rglru_init_state)
+    cfg = smoke_config(get_config("recurrentgemma-2b"))
+    p = rglru_init(jax.random.key(1), cfg, jnp.float32)
+    B, S = 2, 12
+    x = jnp.asarray(rng.standard_normal((B, S, cfg.d_model)), jnp.float32)
+    full, st = rglru_apply(x, p, cfg)
+    st_seq = rglru_init_state(cfg, B)
+    outs = []
+    for t in range(S):
+        o, st_seq = rglru_decode(x[:, t:t + 1], p, cfg, st_seq)
+        outs.append(o)
+    seq = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(seq), atol=2e-5,
+                               rtol=2e-4)
+    np.testing.assert_allclose(np.asarray(st["h"]), np.asarray(st_seq["h"]),
+                               atol=2e-5)

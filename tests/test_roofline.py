@@ -1,0 +1,93 @@
+"""Roofline machinery tests: param counting, analytic costs, specs."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import SHAPES, get_config, list_configs, shape_applies
+from repro.models import LMModel
+from repro.models.model import param_specs
+from repro.roofline.analysis import count_params, model_flops
+from repro.roofline.analytic import cost_for
+
+MESH_1POD = {"data": 16, "model": 16}
+
+
+def _actual_params(name):
+    cfg = get_config(name)
+    ap = LMModel(cfg).abstract_params()
+    return sum(int(np.prod(l.shape)) for l in jax.tree.leaves(ap))
+
+
+@pytest.mark.parametrize("name,nominal_b", [
+    ("deepseek-v3-671b", 671), ("dbrx-132b", 132), ("gemma2-9b", 9.2),
+    ("qwen2-1.5b", 1.5), ("qwen3-4b", 4.0), ("smollm-360m", 0.36),
+    ("rwkv6-1.6b", 1.6), ("recurrentgemma-2b", 2.7),
+    ("musicgen-large", 3.3), ("qwen2-vl-2b", 1.5),
+])
+def test_param_counts_near_nominal(name, nominal_b):
+    """Instantiated parameter count is within 40% of the published size
+    (configs come from the assignment; embeddings/frontends cause slack)."""
+    actual = _actual_params(name)
+    assert 0.6 * nominal_b * 1e9 < actual < 1.55 * nominal_b * 1e9, \
+        (name, actual / 1e9)
+
+
+@pytest.mark.parametrize("name", list_configs())
+def test_analytic_count_matches_instantiated(name):
+    """roofline.count_params (analytic) vs real init, within 15%."""
+    total, active = count_params(get_config(name))
+    actual = _actual_params(name)
+    assert abs(total - actual) / actual < 0.15, (name, total / 1e9,
+                                                 actual / 1e9)
+    assert active <= total + 1
+
+
+@pytest.mark.parametrize("name", list_configs())
+@pytest.mark.parametrize("shape", list(SHAPES))
+def test_analytic_cost_positive(name, shape):
+    cfg = get_config(name)
+    sh = SHAPES[shape]
+    ok, _ = shape_applies(cfg, sh)
+    if not ok:
+        pytest.skip("shape not applicable")
+    c = cost_for(cfg, sh, MESH_1POD)
+    assert c.flops > 0 and c.hbm_bytes > 0 and c.mem_bytes > 0
+    # decode flops must be tiny vs train flops
+    if sh.kind == "decode":
+        tr = cost_for(cfg, SHAPES["train_4k"], MESH_1POD)
+        assert c.flops < tr.flops / 100
+
+
+def test_model_flops_scale():
+    cfg = get_config("qwen2-1.5b")
+    f_train = model_flops(cfg, SHAPES["train_4k"])
+    # 6·N·D ballpark: 6 × 1.5e9 × 1e6 ≈ 9.5e15
+    assert 3e15 < f_train < 3e16
+
+
+def test_param_specs_divisible_everywhere():
+    """Every sharded dim must divide by its mesh axes (post-sanitize)."""
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+
+    class FakeMesh:
+        shape = {"data": 16, "model": 16}
+        axis_names = ("data", "model")
+
+    for name in list_configs():
+        cfg = get_config(name)
+        ap = LMModel(cfg).abstract_params()
+        specs = param_specs(cfg, ap, FakeMesh())
+        for (path, leaf), (_, spec) in zip(
+                jax.tree_util.tree_flatten_with_path(ap)[0],
+                jax.tree_util.tree_flatten_with_path(
+                    specs, is_leaf=lambda x: hasattr(x, "_normalized_spec")
+                    or str(type(x).__name__) == "PartitionSpec")[0]):
+            for i, s in enumerate(spec):
+                if s is None:
+                    continue
+                axes = s if isinstance(s, tuple) else (s,)
+                size = 1
+                for a in axes:
+                    size *= FakeMesh.shape[a]
+                assert leaf.shape[i] % size == 0, (name, path, spec,
+                                                   leaf.shape)
