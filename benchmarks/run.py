@@ -5,6 +5,7 @@
   Fig. 4 / Fig. 5   -> bench_sweep      (random batch sweep: runtime + error)
   Fig. 1            -> bench_partition  (work-partitioning ablation)
   (beyond paper)    -> bench_fusion     (fused updateRanks accounting)
+  (beyond paper)    -> bench_stream     (incremental snapshot vs rebuild)
 
 Prints ``name,us_per_call,derived`` CSV rows.
 """
@@ -13,12 +14,12 @@ import sys
 
 def main() -> None:
     from . import (bench_static, bench_dynamic, bench_sweep, bench_partition,
-                   bench_fusion)
+                   bench_fusion, bench_stream)
     print("name,us_per_call,derived")
     only = sys.argv[1] if len(sys.argv) > 1 else None
     mods = {"static": bench_static, "dynamic": bench_dynamic,
             "sweep": bench_sweep, "partition": bench_partition,
-            "fusion": bench_fusion}
+            "fusion": bench_fusion, "stream": bench_stream}
     for key, mod in mods.items():
         if only and key != only:
             continue

@@ -1,11 +1,12 @@
 """Core library: the paper's contribution (Static + DF/DF-P PageRank) in JAX."""
 from .graph import (Graph, HybridLayout, BatchUpdate, build_graph, build_hybrid,
                     apply_batch, random_graph, powerlaw_graph, random_batch,
-                    temporal_stream)
+                    temporal_stream, edge_keys, keys_to_edges,
+                    ragged_positions, hybrid_caps, graph_from_sorted_keys)
 from .partition import partition_by_degree, partition_by_degree_jax
 from .pagerank import (DeviceGraph, PRParams, to_device, device_graph,
-                       init_ranks, pull_sum, pull_max, update_ranks,
-                       static_pagerank)
+                       as_device_graph, init_ranks, pull_sum, pull_max,
+                       update_ranks, static_pagerank)
 from .frontier import initial_affected, expand_affected, reach_affected
 from .dynamic import (DeviceBatch, batch_to_device, nd_pagerank, dt_pagerank,
                       df_pagerank, dfp_pagerank)
@@ -16,9 +17,11 @@ from .reference import reference_pagerank, numpy_pagerank, l1_error
 __all__ = [
     "Graph", "HybridLayout", "BatchUpdate", "build_graph", "build_hybrid",
     "apply_batch", "random_graph", "powerlaw_graph", "random_batch",
-    "temporal_stream", "partition_by_degree", "partition_by_degree_jax",
-    "DeviceGraph", "PRParams", "to_device", "device_graph", "init_ranks",
-    "pull_sum", "pull_max", "update_ranks", "static_pagerank",
+    "temporal_stream", "edge_keys", "keys_to_edges", "ragged_positions",
+    "hybrid_caps", "graph_from_sorted_keys",
+    "partition_by_degree", "partition_by_degree_jax",
+    "DeviceGraph", "PRParams", "to_device", "device_graph", "as_device_graph",
+    "init_ranks", "pull_sum", "pull_max", "update_ranks", "static_pagerank",
     "initial_affected", "expand_affected", "reach_affected",
     "DeviceBatch", "batch_to_device", "nd_pagerank", "dt_pagerank",
     "df_pagerank", "dfp_pagerank",

@@ -27,12 +27,11 @@ from typing import Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from .dynamic import DeviceBatch, _loop
 from .frontier import expand_affected, initial_affected
-from .graph import Graph, build_hybrid
-from .pagerank import DeviceGraph, PRParams, to_device
+from .graph import Graph, build_hybrid, next_pow2 as _next_pow2
+from .pagerank import DeviceGraph, PRParams, as_device_graph, to_device
 
 __all__ = ["forward_device_graph", "dfp_pagerank_compact",
            "df_pagerank_compact"]
@@ -42,9 +41,7 @@ def forward_device_graph(g: Graph, d_p: int = 64, tile: int = 1024,
                          **caps) -> DeviceGraph:
     """Out-edge hybrid layout (the paper's 'Partition G' by out-degree):
     rows of the ELL are each vertex's OUT-neighbors."""
-    gt = Graph(n=g.n, offsets=g.t_offsets, targets=g.t_sources,
-               t_offsets=g.offsets, t_sources=g.targets)
-    return to_device(build_hybrid(gt, d_p=d_p, tile=tile, **caps))
+    return to_device(build_hybrid(g.transpose(), d_p=d_p, tile=tile, **caps))
 
 
 def _compact(flags: jnp.ndarray, k: int, fill: int) -> jnp.ndarray:
@@ -166,10 +163,6 @@ def _compact_loop(dg: DeviceGraph, fwd: DeviceGraph, r0, dv0, dn0,
     return r, dv, dn, delta, iters
 
 
-def _next_pow2(x: int) -> int:
-    return 1 << max(4, int(np.ceil(np.log2(max(2, x)))))
-
-
 def _df_like_compact(dg, fwd, r_prev, batch: DeviceBatch,
                      params: PRParams, *, prune: bool, headroom: int = 16):
     n = dg.n
@@ -204,11 +197,27 @@ def _dense_finish(dg, r, dv, dn, params, prune):
                  closed_form=prune)
 
 
-def dfp_pagerank_compact(dg: DeviceGraph, fwd: DeviceGraph, r_prev,
-                         batch: DeviceBatch, params: PRParams = PRParams()):
+def _stage_pair(dg, fwd):
+    """Resolve (pull, forward) device graphs; a pre-staged snapshot exposing
+    `.dg`/`.fwd_dg` (repro.stream.DeviceSnapshot) may be passed as `dg` with
+    fwd=None and supplies both orientations."""
+    if fwd is None:
+        fwd = getattr(dg, "fwd_dg", None)
+        if fwd is None:
+            raise TypeError("fwd is required unless dg is a snapshot "
+                            "exposing .fwd_dg")
+    return as_device_graph(dg), as_device_graph(fwd)
+
+
+def dfp_pagerank_compact(dg, fwd=None, r_prev=None,
+                         batch: DeviceBatch = None,
+                         params: PRParams = PRParams()):
+    dg, fwd = _stage_pair(dg, fwd)
     return _df_like_compact(dg, fwd, r_prev, batch, params, prune=True)
 
 
-def df_pagerank_compact(dg: DeviceGraph, fwd: DeviceGraph, r_prev,
-                        batch: DeviceBatch, params: PRParams = PRParams()):
+def df_pagerank_compact(dg, fwd=None, r_prev=None,
+                        batch: DeviceBatch = None,
+                        params: PRParams = PRParams()):
+    dg, fwd = _stage_pair(dg, fwd)
     return _df_like_compact(dg, fwd, r_prev, batch, params, prune=False)

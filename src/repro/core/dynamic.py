@@ -15,7 +15,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .frontier import expand_affected, initial_affected, reach_affected
-from .pagerank import DeviceGraph, PRParams, update_ranks
+from .pagerank import DeviceGraph, PRParams, as_device_graph, update_ranks
 
 __all__ = ["DeviceBatch", "batch_to_device", "nd_pagerank", "dt_pagerank",
            "df_pagerank", "dfp_pagerank"]
@@ -72,10 +72,19 @@ def _loop(dg: DeviceGraph, r0: jnp.ndarray, dv0: jnp.ndarray,
     return r, iters
 
 
+def nd_pagerank(dg, r_prev: jnp.ndarray, params: PRParams = PRParams(),
+                pull_sum_fn=None):
+    """Naive-dynamic: previous ranks as the initial guess, all vertices on.
+
+    All four dynamic drivers accept a DeviceGraph or a pre-staged snapshot
+    (anything with a `.dg` attribute, e.g. repro.stream.DeviceSnapshot).
+    """
+    return _nd_pagerank(as_device_graph(dg), r_prev, params, pull_sum_fn)
+
+
 @functools.partial(jax.jit, static_argnames=("params", "pull_sum_fn"))
-def nd_pagerank(dg: DeviceGraph, r_prev: jnp.ndarray,
-                params: PRParams = PRParams(), pull_sum_fn=None):
-    """Naive-dynamic: previous ranks as the initial guess, all vertices on."""
+def _nd_pagerank(dg: DeviceGraph, r_prev: jnp.ndarray,
+                 params: PRParams = PRParams(), pull_sum_fn=None):
     n = dg.n
     on = jnp.ones((n,), jnp.bool_)
     off = jnp.zeros((n,), jnp.bool_)
@@ -83,12 +92,18 @@ def nd_pagerank(dg: DeviceGraph, r_prev: jnp.ndarray,
                  closed_form=False, pull_sum_fn=pull_sum_fn)
 
 
-@functools.partial(jax.jit, static_argnames=("params", "pull_sum_fn"))
-def dt_pagerank(dg: DeviceGraph, dg_prev: DeviceGraph, r_prev: jnp.ndarray,
-                batch: DeviceBatch, params: PRParams = PRParams(),
-                pull_sum_fn=None):
+def dt_pagerank(dg, dg_prev, r_prev: jnp.ndarray, batch: DeviceBatch,
+                params: PRParams = PRParams(), pull_sum_fn=None):
     """Dynamic Traversal (Desikan et al.): mark everything reachable from the
     updated vertices in G^{t-1} ∪ G^t, then iterate on that frozen set."""
+    return _dt_pagerank(as_device_graph(dg), as_device_graph(dg_prev),
+                        r_prev, batch, params, pull_sum_fn)
+
+
+@functools.partial(jax.jit, static_argnames=("params", "pull_sum_fn"))
+def _dt_pagerank(dg: DeviceGraph, dg_prev: DeviceGraph, r_prev: jnp.ndarray,
+                 batch: DeviceBatch, params: PRParams = PRParams(),
+                 pull_sum_fn=None):
     n = dg.n
     seeds = jnp.zeros((n,), jnp.bool_)
     seeds = seeds.at[batch.del_src].set(True, mode="drop")
@@ -111,17 +126,29 @@ def _df_like(dg: DeviceGraph, r_prev: jnp.ndarray, batch: DeviceBatch,
                  closed_form=prune, pull_sum_fn=pull_sum_fn)
 
 
-@functools.partial(jax.jit, static_argnames=("params", "pull_sum_fn"))
-def df_pagerank(dg: DeviceGraph, r_prev: jnp.ndarray, batch: DeviceBatch,
+def df_pagerank(dg, r_prev: jnp.ndarray, batch: DeviceBatch,
                 params: PRParams = PRParams(), pull_sum_fn=None):
     """Dynamic Frontier: incremental expansion, no pruning (Eq. 1 update)."""
+    return _df_pagerank(as_device_graph(dg), r_prev, batch, params,
+                        pull_sum_fn)
+
+
+@functools.partial(jax.jit, static_argnames=("params", "pull_sum_fn"))
+def _df_pagerank(dg: DeviceGraph, r_prev: jnp.ndarray, batch: DeviceBatch,
+                 params: PRParams = PRParams(), pull_sum_fn=None):
     return _df_like(dg, r_prev, batch, params, prune=False,
                     pull_sum_fn=pull_sum_fn)
 
 
-@functools.partial(jax.jit, static_argnames=("params", "pull_sum_fn"))
-def dfp_pagerank(dg: DeviceGraph, r_prev: jnp.ndarray, batch: DeviceBatch,
+def dfp_pagerank(dg, r_prev: jnp.ndarray, batch: DeviceBatch,
                  params: PRParams = PRParams(), pull_sum_fn=None):
     """Dynamic Frontier with Pruning: expansion + pruning, closed form Eq. 2."""
+    return _dfp_pagerank(as_device_graph(dg), r_prev, batch, params,
+                         pull_sum_fn)
+
+
+@functools.partial(jax.jit, static_argnames=("params", "pull_sum_fn"))
+def _dfp_pagerank(dg: DeviceGraph, r_prev: jnp.ndarray, batch: DeviceBatch,
+                  params: PRParams = PRParams(), pull_sum_fn=None):
     return _df_like(dg, r_prev, batch, params, prune=True,
                     pull_sum_fn=pull_sum_fn)

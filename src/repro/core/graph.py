@@ -32,7 +32,48 @@ __all__ = [
     "powerlaw_graph",
     "random_batch",
     "temporal_stream",
+    "edge_keys",
+    "keys_to_edges",
+    "next_pow2",
+    "ragged_positions",
+    "hybrid_caps",
+    "graph_from_sorted_keys",
 ]
+
+
+# ---------------------------------------------------------------------------
+# Edge-key and ragged-index primitives (shared with repro.stream)
+# ---------------------------------------------------------------------------
+
+def edge_keys(n: int, src: np.ndarray, dst: np.ndarray) -> np.ndarray:
+    """Pack (src, dst) pairs into sortable int64 keys (src-major order)."""
+    return np.asarray(src, np.int64) * n + np.asarray(dst, np.int64)
+
+
+def keys_to_edges(n: int, keys: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """Inverse of `edge_keys`."""
+    return (keys // n).astype(np.int32), (keys % n).astype(np.int32)
+
+
+def next_pow2(x, floor: int = 16) -> int:
+    """Smallest power of two >= max(x, 1), floored for bucket stability.
+
+    The shared shape-bucketing policy: jitted engines see capacities only
+    from this ladder, so the compact engine, the stream delta padding, and
+    the snapshot scatter paths all compile O(log) variants total.
+    """
+    return max(floor, 1 << int(np.ceil(np.log2(max(1, x)))))
+
+
+def ragged_positions(counts: np.ndarray) -> np.ndarray:
+    """Within-segment positions for ragged data: counts [k] -> [sum(counts)]
+    array 0..c0-1, 0..c1-1, ... — one vectorized pass, no Python loop."""
+    counts = np.asarray(counts, np.int64)
+    total = int(counts.sum())
+    if total == 0:
+        return np.zeros(0, np.int64)
+    starts = np.cumsum(counts) - counts
+    return np.arange(total, dtype=np.int64) - np.repeat(starts, counts)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -66,6 +107,16 @@ class Graph:
     def has_edge(self, u: int, v: int) -> bool:
         lo, hi = self.offsets[u], self.offsets[u + 1]
         return bool(np.any(self.targets[lo:hi] == v))
+
+    def transpose(self) -> "Graph":
+        """G' with edge directions reversed (shares the underlying arrays).
+
+        `build_hybrid(g)` lays out *in*-neighbors; `build_hybrid(g.transpose())`
+        therefore lays out out-neighbors — the forward orientation used for
+        compacted frontier expansion.
+        """
+        return Graph(n=self.n, offsets=self.t_offsets, targets=self.t_sources,
+                     t_offsets=self.offsets, t_sources=self.targets)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -109,6 +160,25 @@ def build_graph(n: int, src: np.ndarray, dst: np.ndarray,
     t_offsets, t_sources, _, _ = _csr_from_edges(n, udst, usrc)
     return Graph(n=n, offsets=offsets, targets=targets,
                  t_offsets=t_offsets, t_sources=t_sources)
+
+
+def graph_from_sorted_keys(n: int, keys: np.ndarray) -> Graph:
+    """Build a Graph from already-unique, already-sorted edge keys.
+
+    This is the fast-rebuild path used by `repro.stream.snapshot`: the
+    maintained key set is sorted src-major, so the forward CSR falls out of a
+    single bincount (no np.unique re-sort as in `build_graph`).
+    """
+    src, dst = keys_to_edges(n, keys)
+    counts = np.bincount(src, minlength=n).astype(np.int64)
+    offsets = np.zeros(n + 1, dtype=np.int64)
+    np.cumsum(counts, out=offsets[1:])
+    order = np.argsort(dst, kind="stable")
+    t_counts = np.bincount(dst, minlength=n).astype(np.int64)
+    t_offsets = np.zeros(n + 1, dtype=np.int64)
+    np.cumsum(t_counts, out=t_offsets[1:])
+    return Graph(n=n, offsets=offsets, targets=dst,
+                 t_offsets=t_offsets, t_sources=src[order])
 
 
 def add_self_loops(n: int, src: np.ndarray, dst: np.ndarray):
@@ -194,54 +264,46 @@ def build_hybrid(g: Graph, d_p: int = 64, tile: int = 1024,
     is_low = indeg <= d_p
     n = g.n
 
-    # --- ELL side ---------------------------------------------------------
+    # --- ELL side (one vectorized ragged-fill pass) ------------------------
     ell_idx = np.zeros((n, d_p), dtype=np.int32)
     ell_mask = np.zeros((n, d_p), dtype=np.float32)
     low = np.nonzero(is_low)[0]
     if low.size:
-        deg_low = indeg[low]
-        # vectorized ragged fill
+        deg_low = indeg[low].astype(np.int64)
         rows = np.repeat(low, deg_low)
-        pos = np.concatenate([np.arange(d, dtype=np.int64) for d in deg_low]) \
-            if low.size else np.zeros(0, np.int64)
-        starts = g.t_offsets[low]
-        flat = np.concatenate([g.t_sources[s:s + d]
-                               for s, d in zip(starts, deg_low)]) \
-            if low.size else np.zeros(0, np.int32)
-        ell_idx[rows, pos] = flat
+        pos = ragged_positions(deg_low)
+        src_at = np.repeat(g.t_offsets[low], deg_low) + pos
+        ell_idx[rows, pos] = g.t_sources[src_at]
         ell_mask[rows, pos] = 1.0
 
-    # --- tiled CSR side ----------------------------------------------------
+    # --- tiled CSR side (single scatter; no per-vertex Python loop) --------
     hi = np.nonzero(~is_low)[0].astype(np.int32)
     n_hi = int(hi.size)
     if n_hi_cap is None:
         n_hi_cap = max(n_hi, 1)
     assert n_hi <= n_hi_cap, "n_hi_cap too small for this snapshot"
-    tiles = []
-    tmasks = []
-    rowmap = []
-    for slot, v in enumerate(hi):
-        lo_, hi_ = g.t_offsets[v], g.t_offsets[v + 1]
-        nbr = g.t_sources[lo_:hi_]
-        nt = (nbr.size + tile - 1) // tile
-        pad = nt * tile - nbr.size
-        padded = np.concatenate([nbr, np.zeros(pad, np.int32)])
-        mask = np.concatenate([np.ones(nbr.size, np.float32),
-                               np.zeros(pad, np.float32)])
-        tiles.append(padded.reshape(nt, tile))
-        tmasks.append(mask.reshape(nt, tile))
-        rowmap.extend([slot] * nt)
-    nt_total = len(rowmap)
+    deg_hi = indeg[hi].astype(np.int64)
+    nt_per = (deg_hi + tile - 1) // tile            # tiles per high vertex
+    nt_total = int(nt_per.sum())
     if t_cap is None:
         t_cap = max(nt_total, 1)
     assert nt_total <= t_cap, "t_cap too small for this snapshot"
     hi_tiles = np.zeros((t_cap, tile), dtype=np.int32)
     hi_tmask = np.zeros((t_cap, tile), dtype=np.float32)
-    if nt_total:
-        hi_tiles[:nt_total] = np.concatenate(tiles, axis=0)
-        hi_tmask[:nt_total] = np.concatenate(tmasks, axis=0)
     hi_rowmap = np.full(t_cap, n_hi_cap - 1, dtype=np.int32)  # pad tiles -> last slot, mask=0
-    hi_rowmap[:nt_total] = np.asarray(rowmap, dtype=np.int32) if nt_total else hi_rowmap[:0]
+    if nt_total:
+        # flat position of every high edge inside the [t_cap*tile] tile pool:
+        # per-vertex base (cumsum of nt*tile) + within-vertex edge position
+        base = np.cumsum(nt_per * tile) - nt_per * tile
+        pos = ragged_positions(deg_hi)
+        flat_at = np.repeat(base, deg_hi) + pos
+        src_at = np.repeat(g.t_offsets[hi], deg_hi) + pos
+        flat_tiles = hi_tiles.reshape(-1)
+        flat_tmask = hi_tmask.reshape(-1)
+        flat_tiles[flat_at] = g.t_sources[src_at]
+        flat_tmask[flat_at] = 1.0
+        hi_rowmap[:nt_total] = np.repeat(
+            np.arange(n_hi, dtype=np.int32), nt_per)
     hi_ids = np.full(n_hi_cap, n, dtype=np.int32)  # sentinel n = "no vertex"
     hi_ids[:n_hi] = hi
 
@@ -250,6 +312,13 @@ def build_hybrid(g: Graph, d_p: int = 64, tile: int = 1024,
         hi_ids=hi_ids, hi_tiles=hi_tiles, hi_tmask=hi_tmask,
         hi_rowmap=hi_rowmap, is_low=is_low, out_deg=g.out_degree(),
         perm=perm, n_low=int(n_low))
+
+
+def hybrid_caps(lay: HybridLayout) -> dict:
+    """Capacity signature of a layout — pass as **caps to `build_hybrid` to
+    rebuild a later snapshot with identical device shapes (no recompiles)."""
+    return dict(d_p=lay.d_p, tile=lay.tile, n_hi_cap=lay.n_hi_cap,
+                t_cap=int(lay.hi_tiles.shape[0]))
 
 
 # ---------------------------------------------------------------------------

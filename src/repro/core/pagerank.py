@@ -22,8 +22,8 @@ import numpy as np
 from .graph import Graph, HybridLayout, build_hybrid
 
 __all__ = [
-    "DeviceGraph", "to_device", "pull_sum", "pull_max", "update_ranks",
-    "static_pagerank", "PRParams", "init_ranks",
+    "DeviceGraph", "to_device", "as_device_graph", "pull_sum", "pull_max",
+    "update_ranks", "static_pagerank", "PRParams", "init_ranks",
 ]
 
 ALPHA = 0.85
@@ -76,6 +76,26 @@ def to_device(layout: HybridLayout) -> DeviceGraph:
 
 def device_graph(g: Graph, d_p: int = 64, tile: int = 1024, **caps) -> DeviceGraph:
     return to_device(build_hybrid(g, d_p=d_p, tile=tile, **caps))
+
+
+def as_device_graph(obj) -> DeviceGraph:
+    """Coerce to a pull-side DeviceGraph.
+
+    Accepts a DeviceGraph (identity), any pre-staged snapshot exposing `.dg`
+    (e.g. `repro.stream.DeviceSnapshot`), a host HybridLayout, or a Graph.
+    Drivers call this outside their jitted impls so snapshots can be passed
+    directly without retracing on the wrapper object.
+    """
+    if isinstance(obj, DeviceGraph):
+        return obj
+    staged = getattr(obj, "dg", None)
+    if staged is not None:
+        return staged
+    if isinstance(obj, HybridLayout):
+        return to_device(obj)
+    if isinstance(obj, Graph):
+        return device_graph(obj)
+    raise TypeError(f"cannot stage {type(obj).__name__} as a DeviceGraph")
 
 
 def init_ranks(n: int, dtype=jnp.float64) -> jnp.ndarray:
@@ -170,11 +190,19 @@ def update_ranks(dg: DeviceGraph, r: jnp.ndarray, affected: jnp.ndarray,
 # Static PageRank driver (paper Alg. 1)
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnames=("params", "pull_sum_fn"))
-def static_pagerank(dg: DeviceGraph, r0: jnp.ndarray,
-                    params: PRParams = PRParams(),
+def static_pagerank(dg, r0: jnp.ndarray, params: PRParams = PRParams(),
                     pull_sum_fn=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Power iteration to L-inf tolerance. Returns (ranks, n_iters)."""
+    """Power iteration to L-inf tolerance. Returns (ranks, n_iters).
+
+    `dg` may be a DeviceGraph or any pre-staged snapshot (see as_device_graph).
+    """
+    return _static_pagerank(as_device_graph(dg), r0, params, pull_sum_fn)
+
+
+@functools.partial(jax.jit, static_argnames=("params", "pull_sum_fn"))
+def _static_pagerank(dg: DeviceGraph, r0: jnp.ndarray,
+                     params: PRParams = PRParams(),
+                     pull_sum_fn=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
     n = dg.n
     all_on = jnp.ones((n,), dtype=jnp.bool_)
 

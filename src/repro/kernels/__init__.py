@@ -9,7 +9,8 @@ from .pr_update import pr_update
 from .linf_delta import linf_delta
 from .flash_attn import flash_attention
 from .ops import pull_sum_kernels, update_ranks_kernel, default_interpret
+from .stream_scatter import scatter_rows, ell_scatter_rows
 
 __all__ = ["ell_pull", "csr_block_pull", "pr_update", "linf_delta",
            "pull_sum_kernels", "update_ranks_kernel", "default_interpret",
-           "flash_attention"]
+           "flash_attention", "scatter_rows", "ell_scatter_rows"]

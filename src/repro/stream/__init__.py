@@ -1,0 +1,18 @@
+"""repro.stream — incremental snapshot maintenance + streaming DF-P engine.
+
+The batch-update lifecycle as a subsystem: `delta` canonicalizes Δ^t,
+`snapshot` maintains both device-resident hybrid layouts in place,
+`session` chains DF-P across batches, `replay` drives workloads with
+per-batch latency accounting. See DESIGN.md §3.
+"""
+from .delta import Delta, ingest, next_pow2
+from .snapshot import CapacityError, DeviceSnapshot, SnapshotStats
+from .session import BatchStats, StreamSession
+from .replay import ReplayRecord, replay, churn_workload
+
+__all__ = [
+    "Delta", "ingest", "next_pow2",
+    "CapacityError", "DeviceSnapshot", "SnapshotStats",
+    "BatchStats", "StreamSession",
+    "ReplayRecord", "replay", "churn_workload",
+]

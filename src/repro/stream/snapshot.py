@@ -1,0 +1,504 @@
+"""Incremental device-resident snapshot maintenance.
+
+``DeviceSnapshot`` owns both hybrid layouts of the current graph G^t —
+
+  * the **pull** half (rows = in-neighbors): rank pull + frontier expansion,
+  * the **fwd** half (rows = out-neighbors): compacted frontier scatter —
+
+and applies a canonical ``Delta`` *in place*: O(|Δ| · d_p) host bookkeeping
+plus O(touched rows) device scatters, instead of the O(|E|) host rebuild
+(`apply_batch` + `build_hybrid`) the static pipeline pays per batch.
+
+Mechanics per edited row (mirrors are host numpy; device arrays are updated
+by row/tile scatters, via `kernels.stream_scatter` on TPU):
+
+  * low-degree endpoints: ELL row edits — append at the row's fill cursor,
+    delete by swapping the last valid entry into the hole;
+  * high-degree endpoints: tile-slot edits against a **free list** — the
+    last tile of a vertex is the only partial one, so inserts append there
+    (allocating a fresh tile when it fills) and deletes swap from it
+    (freeing it when it empties). Used tiles therefore always equal
+    ceil(deg/tile) per vertex — no hole accumulation;
+  * degree-crossing vertices migrate between sides: deg > d_p promotes a
+    row out of the ELL into tiles; demotion back happens only once deg
+    drops to `low_water` (< d_p hysteresis) to avoid thrash, parking some
+    sub-d_p vertices on the tile side — the *fragmentation* this design
+    tolerates, bounded by `frag_budget`.
+
+Fallback: capacity exhaustion (slot/tile free list empty), fragmentation
+above budget, or a batch too large for incremental maintenance to win
+(`rebuild_threshold` · |E|) all route to a full vectorized `build_hybrid`
+rebuild at fixed capacities (grown by pow2 when genuinely exceeded, which
+is the only event that changes device shapes / retriggers jit).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.graph import (Graph, HybridLayout, build_hybrid, edge_keys,
+                          graph_from_sorted_keys, keys_to_edges)
+from ..core.pagerank import DeviceGraph
+from .delta import Delta, next_pow2
+
+__all__ = ["CapacityError", "DeviceSnapshot", "SnapshotStats"]
+
+
+class CapacityError(RuntimeError):
+    """A fixed-capacity structure (hi slots / tile pool) is exhausted."""
+
+
+@dataclasses.dataclass
+class SnapshotStats:
+    """Per-apply accounting (replay aggregates these into latency records)."""
+    net_ins: int = 0
+    net_del: int = 0
+    rows_touched: int = 0
+    tiles_touched: int = 0
+    migrations: int = 0
+    rebuilt: bool = False
+    rebuild_reason: str = ""
+    host_s: float = 0.0
+    device_s: float = 0.0
+
+
+# ---------------------------------------------------------------------------
+# Device scatter helpers (shared jit cache across halves and snapshots)
+# ---------------------------------------------------------------------------
+
+@jax.jit
+def _scatter_pair(idx, mask, rows, new_idx, new_mask):
+    return idx.at[rows].set(new_idx), mask.at[rows].set(new_mask)
+
+
+@jax.jit
+def _scatter_1d(dst, idx, vals):
+    return dst.at[idx].set(vals)
+
+
+def _pad_rows(rows: np.ndarray, cap: int) -> np.ndarray:
+    out = np.full(cap, rows[0], np.int32)
+    out[:rows.size] = rows
+    return out
+
+
+class _HalfLayout:
+    """Host mirror of one orientation's hybrid layout with in-place edits.
+
+    `row_deg[v]` is the number of neighbors in row v (in-degree for the pull
+    half, out-degree for the fwd half). The DeviceGraph's `out_deg` field is
+    the *opposite* orientation's degree and is owned by the snapshot.
+    """
+
+    def __init__(self, lay: HybridLayout, row_deg: np.ndarray,
+                 scatter_impl: str = "jnp"):
+        n = lay.n
+        self.n, self.d_p, self.tile = n, lay.d_p, lay.tile
+        self.ell_idx = np.ascontiguousarray(lay.ell_idx)
+        self.ell_mask = np.ascontiguousarray(lay.ell_mask)
+        self.hi_tiles = np.ascontiguousarray(lay.hi_tiles)
+        self.hi_tmask = np.ascontiguousarray(lay.hi_tmask)
+        self.hi_rowmap = np.ascontiguousarray(lay.hi_rowmap)
+        self.hi_ids = np.ascontiguousarray(lay.hi_ids)
+        self.is_low = np.ascontiguousarray(lay.is_low)
+        self.row_deg = row_deg.astype(np.int64).copy()
+        self.scatter_impl = scatter_impl
+        # slot / tile occupancy, reconstructed from the built layout: slots
+        # [0, n_hi) and tiles [0, nt_total) are used contiguously.
+        n_hi_cap = lay.n_hi_cap
+        hi = np.nonzero(lay.hi_ids < n)[0]
+        self.hi_slot = np.full(n, -1, np.int64)
+        self.hi_slot[lay.hi_ids[hi]] = hi
+        self.slot_tiles: List[List[int]] = [[] for _ in range(n_hi_cap)]
+        used_tiles = np.nonzero(lay.hi_tmask.any(axis=1))[0]
+        for t in used_tiles.tolist():
+            self.slot_tiles[int(lay.hi_rowmap[t])].append(t)
+        used_t = set(used_tiles.tolist())
+        self.free_tiles = [t for t in range(lay.hi_tiles.shape[0] - 1, -1, -1)
+                           if t not in used_t]
+        used_s = set(hi.tolist())
+        self.free_slots = [s for s in range(n_hi_cap - 1, -1, -1)
+                           if s not in used_s]
+        self._dirty_rows: set = set()
+        self._dirty_tiles: set = set()
+        self._rowmap_dirty = False   # hi_rowmap changed (tile alloc/free)
+        self._side_dirty = False     # hi_ids / is_low changed (migration)
+        self.migrations = 0
+        # Device residents. Staged from COPIES: on CPU, jax may zero-copy
+        # alias a suitably-aligned numpy buffer, and these mirrors are
+        # mutated in place across batches — aliasing would mutate the
+        # "immutable" device arrays underneath cached computations.
+        self.dev_ell_idx = jnp.asarray(self.ell_idx.copy())
+        self.dev_ell_mask = jnp.asarray(self.ell_mask.copy())
+        self.dev_hi_tiles = jnp.asarray(self.hi_tiles.copy())
+        self.dev_hi_tmask = jnp.asarray(self.hi_tmask.copy())
+        self.dev_hi_rowmap = jnp.asarray(self.hi_rowmap.copy())
+        self.dev_hi_ids = jnp.asarray(self.hi_ids.copy())
+        self.dev_is_low = jnp.asarray(self.is_low.copy())
+
+    # -- structural edits (host mirrors) ------------------------------------
+
+    def insert(self, row: int, nbr: int) -> None:
+        if self.is_low[row]:
+            d = int(self.row_deg[row])
+            if d < self.d_p:
+                self.ell_idx[row, d] = nbr
+                self.ell_mask[row, d] = 1.0
+                self.row_deg[row] = d + 1
+                self._dirty_rows.add(row)
+                return
+            self._migrate_to_high(row)
+        self._hi_insert(row, nbr)
+
+    def delete(self, row: int, nbr: int) -> None:
+        if self.is_low[row]:
+            d = int(self.row_deg[row])
+            j = int(np.nonzero(self.ell_idx[row, :d] == nbr)[0][0])
+            last = d - 1
+            self.ell_idx[row, j] = self.ell_idx[row, last]
+            self.ell_idx[row, last] = 0
+            self.ell_mask[row, last] = 0.0
+            self.row_deg[row] = last
+            self._dirty_rows.add(row)
+            return
+        self._hi_delete(row, nbr)
+        if self.row_deg[row] <= self.low_water:
+            self._migrate_to_low(row)
+
+    @property
+    def low_water(self) -> int:
+        return getattr(self, "_low_water", max(self.d_p // 2, 1))
+
+    @low_water.setter
+    def low_water(self, v: int) -> None:
+        self._low_water = min(v, self.d_p)
+
+    def _hi_insert(self, row: int, nbr: int) -> None:
+        slot = int(self.hi_slot[row])
+        tiles = self.slot_tiles[slot]
+        d = int(self.row_deg[row])
+        fill = d - (len(tiles) - 1) * self.tile if tiles else self.tile
+        if fill == self.tile:
+            if not self.free_tiles:
+                raise CapacityError("tile pool exhausted")
+            t = self.free_tiles.pop()
+            self.hi_rowmap[t] = slot
+            self._rowmap_dirty = True
+            tiles.append(t)
+            fill = 0
+        t = tiles[-1]
+        self.hi_tiles[t, fill] = nbr
+        self.hi_tmask[t, fill] = 1.0
+        self.row_deg[row] = d + 1
+        self._dirty_tiles.add(t)
+
+    def _hi_delete(self, row: int, nbr: int) -> None:
+        slot = int(self.hi_slot[row])
+        tiles = self.slot_tiles[slot]
+        d = int(self.row_deg[row])
+        fill = d - (len(tiles) - 1) * self.tile
+        t = j = -1
+        for cand in tiles:
+            hits = np.nonzero((self.hi_tiles[cand] == nbr)
+                              & (self.hi_tmask[cand] > 0))[0]
+            if hits.size:
+                t, j = cand, int(hits[0])
+                break
+        assert t >= 0, "edge not present in tile list"
+        tl, jl = tiles[-1], fill - 1
+        self.hi_tiles[t, j] = self.hi_tiles[tl, jl]
+        self.hi_tiles[tl, jl] = 0
+        self.hi_tmask[tl, jl] = 0.0
+        self._dirty_tiles.add(t)
+        self._dirty_tiles.add(tl)
+        self.row_deg[row] = d - 1
+        if jl == 0:  # last tile emptied
+            tiles.pop()
+            self._free_tile(tl)
+
+    def _free_tile(self, t: int) -> None:
+        self.hi_tiles[t] = 0
+        self.hi_tmask[t] = 0.0
+        self.hi_rowmap[t] = self.hi_ids.shape[0] - 1  # pad convention
+        self._rowmap_dirty = True
+        self.free_tiles.append(t)
+        self._dirty_tiles.add(t)
+
+    def _migrate_to_high(self, row: int) -> None:
+        if not self.free_slots:
+            raise CapacityError("hi slot table exhausted")
+        slot = self.free_slots.pop()
+        self.hi_slot[row] = slot
+        self.hi_ids[slot] = row
+        self._side_dirty = True
+        d = int(self.row_deg[row])
+        nbrs = self.ell_idx[row, :d].copy()
+        self.ell_idx[row, :d] = 0
+        self.ell_mask[row, :d] = 0.0
+        self.is_low[row] = False
+        self._dirty_rows.add(row)
+        tiles = self.slot_tiles[slot]
+        for off in range(0, d, self.tile):
+            if not self.free_tiles:
+                raise CapacityError("tile pool exhausted")
+            t = self.free_tiles.pop()
+            chunk = nbrs[off:off + self.tile]
+            self.hi_tiles[t, :chunk.size] = chunk
+            self.hi_tmask[t, :chunk.size] = 1.0
+            self.hi_rowmap[t] = slot
+            self._rowmap_dirty = True
+            tiles.append(t)
+            self._dirty_tiles.add(t)
+        self.migrations += 1
+
+    def _migrate_to_low(self, row: int) -> None:
+        slot = int(self.hi_slot[row])
+        tiles = self.slot_tiles[slot]
+        d = int(self.row_deg[row])
+        nbrs = np.zeros(d, np.int32)
+        at = 0
+        for t in tiles:
+            valid = np.nonzero(self.hi_tmask[t] > 0)[0]
+            nbrs[at:at + valid.size] = self.hi_tiles[t, valid]
+            at += valid.size
+        for t in list(tiles):
+            self._free_tile(t)
+        self.slot_tiles[slot] = []
+        self.hi_ids[slot] = self.n  # sentinel
+        self._side_dirty = True
+        self.free_slots.append(slot)
+        self.hi_slot[row] = -1
+        self.ell_idx[row, :d] = nbrs
+        self.ell_mask[row, :d] = 1.0
+        self.is_low[row] = True
+        self._dirty_rows.add(row)
+        self.migrations += 1
+
+    # -- fragmentation ------------------------------------------------------
+
+    def tile_waste(self) -> float:
+        """Excess tile slots relative to a fresh rebuild, as a fraction of
+        allocated slots. Final-tile padding is charged to both sides (a
+        rebuild pays it too), so what remains is exactly the tiles held by
+        sub-d_p vertices parked on the high side by the demotion hysteresis
+        — the one fragmentation source this design tolerates."""
+        used = self.hi_tiles.shape[0] - len(self.free_tiles)
+        if used == 0:
+            return 0.0
+        deg = self.row_deg[~self.is_low]
+        ideal = int(((deg[deg > self.d_p] + self.tile - 1)
+                     // self.tile).sum())
+        return (used - ideal) / float(used)
+
+    # -- device refresh -----------------------------------------------------
+
+    def _scatter(self, dev_idx, dev_mask, host_idx, host_mask, ids):
+        rows = _pad_rows(ids, next_pow2(ids.size))
+        new_i = jnp.asarray(host_idx[rows])
+        new_m = jnp.asarray(host_mask[rows])
+        rows = jnp.asarray(rows)
+        if self.scatter_impl == "pallas":
+            from ..kernels.stream_scatter import ell_scatter_rows
+            return ell_scatter_rows(dev_idx, dev_mask, rows, new_i, new_m)
+        return _scatter_pair(dev_idx, dev_mask, rows, new_i, new_m)
+
+    def device_refresh(self) -> tuple:
+        """Push dirty rows/tiles to the device arrays; returns (#rows, #tiles)."""
+        nr, nt = len(self._dirty_rows), len(self._dirty_tiles)
+        if nr:
+            ids = np.fromiter(self._dirty_rows, np.int32, nr)
+            self.dev_ell_idx, self.dev_ell_mask = self._scatter(
+                self.dev_ell_idx, self.dev_ell_mask,
+                self.ell_idx, self.ell_mask, ids)
+        if nt:
+            ids = np.fromiter(self._dirty_tiles, np.int32, nt)
+            self.dev_hi_tiles, self.dev_hi_tmask = self._scatter(
+                self.dev_hi_tiles, self.dev_hi_tmask,
+                self.hi_tiles, self.hi_tmask, ids)
+        # small 1-D side tables: re-staged wholesale, but only when touched
+        # (.copy(): see the aliasing note in __init__)
+        if self._rowmap_dirty:
+            self.dev_hi_rowmap = jnp.asarray(self.hi_rowmap.copy())
+            self._rowmap_dirty = False
+        if self._side_dirty:
+            self.dev_hi_ids = jnp.asarray(self.hi_ids.copy())
+            self.dev_is_low = jnp.asarray(self.is_low.copy())
+            self._side_dirty = False
+        self._dirty_rows.clear()
+        self._dirty_tiles.clear()
+        return nr, nt
+
+    def device_graph(self, out_deg: jnp.ndarray) -> DeviceGraph:
+        return DeviceGraph(
+            ell_idx=self.dev_ell_idx, ell_mask=self.dev_ell_mask,
+            hi_ids=self.dev_hi_ids, hi_tiles=self.dev_hi_tiles,
+            hi_tmask=self.dev_hi_tmask, hi_rowmap=self.dev_hi_rowmap,
+            is_low=self.dev_is_low, out_deg=out_deg)
+
+
+class DeviceSnapshot:
+    """Both hybrid layouts of G^t, maintained incrementally across batches.
+
+    Exposes `.dg` (pull orientation) and `.fwd_dg` (forward orientation) —
+    the pre-staged snapshot interface every core driver accepts directly.
+    """
+
+    def __init__(self, g: Graph, d_p: int = 64, tile: int = 256,
+                 hi_headroom: float = 2.0, tile_headroom: float = 2.0,
+                 rebuild_threshold: float = 0.05, frag_budget: float = 0.6,
+                 low_water: Optional[int] = None, scatter_impl: str = "jnp"):
+        self.n = g.n
+        self.d_p, self.tile = d_p, tile
+        self.rebuild_threshold = rebuild_threshold
+        self.frag_budget = frag_budget
+        self._low_water = low_water
+        self._scatter_impl = scatter_impl
+        self._hi_headroom, self._tile_headroom = hi_headroom, tile_headroom
+        src, dst = g.edges()
+        self._keys = np.sort(edge_keys(g.n, src, dst))
+        self._indeg = g.in_degree().astype(np.int64)
+        self._outdeg = g.out_degree().astype(np.int64)
+        self._adopt(g)
+
+    # -- construction / rebuild ---------------------------------------------
+
+    def _caps_for(self, indeg: np.ndarray, outdeg: np.ndarray) -> dict:
+        def side(deg):
+            hi = deg[deg > self.d_p]
+            n_hi = int(hi.size)
+            nt = int(((hi + self.tile - 1) // self.tile).sum())
+            return n_hi, nt
+        hi_p, nt_p = side(indeg)
+        hi_f, nt_f = side(outdeg)
+        n_hi_cap = next_pow2(int(max(hi_p, hi_f, 1) * self._hi_headroom), 8)
+        t_cap = next_pow2(int(max(nt_p, nt_f, 1) * self._tile_headroom), 8)
+        return dict(n_hi_cap=n_hi_cap, t_cap=t_cap)
+
+    def _adopt(self, g: Graph, caps: Optional[dict] = None) -> None:
+        """(Re)build both halves from a host Graph at fixed capacities."""
+        caps = caps or self._caps_for(self._indeg, self._outdeg)
+        lay_p = build_hybrid(g, d_p=self.d_p, tile=self.tile, **caps)
+        lay_f = build_hybrid(g.transpose(), d_p=self.d_p, tile=self.tile,
+                             **caps)
+        self._caps = caps
+        self._pull = _HalfLayout(lay_p, self._indeg, self._scatter_impl)
+        self._fwd = _HalfLayout(lay_f, self._outdeg, self._scatter_impl)
+        if self._low_water is not None:
+            self._pull.low_water = self._low_water
+            self._fwd.low_water = self._low_water
+        self._dev_outdeg = jnp.asarray(self._outdeg.astype(np.int32))
+        self._dev_indeg = jnp.asarray(self._indeg.astype(np.int32))
+
+    def _rebuild(self, reason: str) -> None:
+        g = self.graph()
+        caps = self._caps_for(self._indeg, self._outdeg)
+        # never shrink: keep device shapes stable unless we *must* grow
+        caps = {k: max(v, self._caps[k]) for k, v in caps.items()}
+        self._adopt(g, caps)
+        self._last_rebuild_reason = reason
+
+    # -- queries -------------------------------------------------------------
+
+    @property
+    def m(self) -> int:
+        return int(self._keys.size)
+
+    @property
+    def dg(self) -> DeviceGraph:
+        return self._pull.device_graph(self._dev_outdeg)
+
+    @property
+    def fwd_dg(self) -> DeviceGraph:
+        return self._fwd.device_graph(self._dev_indeg)
+
+    def graph(self) -> Graph:
+        """Materialize the host CSR Graph (verification / rebuild path)."""
+        return graph_from_sorted_keys(self.n, self._keys)
+
+    def fragmentation(self) -> float:
+        return max(self._pull.tile_waste(), self._fwd.tile_waste())
+
+    # -- the batch-update lifecycle ------------------------------------------
+
+    def apply(self, delta: Delta) -> SnapshotStats:
+        """Apply a canonical Δ^t in place; returns per-apply stats."""
+        t0 = time.perf_counter()
+        stats = SnapshotStats()
+        n = self.n
+        # net effect against the current edge set (sorted-key membership)
+        dk = edge_keys(n, delta.del_src, delta.del_dst)
+        pos = np.searchsorted(self._keys, dk)
+        found = (pos < self._keys.size)
+        found[found] = self._keys[pos[found]] == dk[found]
+        net_del = dk[found]
+        ik = edge_keys(n, delta.ins_src, delta.ins_dst)
+        pos = np.searchsorted(self._keys, ik)
+        present = (pos < self._keys.size)
+        present[present] = self._keys[pos[present]] == ik[present]
+        net_ins = ik[~present]
+        stats.net_del, stats.net_ins = int(net_del.size), int(net_ins.size)
+        # maintain the sorted key set (O(|E|) memmove, vectorized)
+        if net_del.size:
+            at = np.searchsorted(self._keys, net_del)
+            self._keys = np.delete(self._keys, at)
+        if net_ins.size:
+            at = np.searchsorted(self._keys, net_ins)
+            self._keys = np.insert(self._keys, at, net_ins)
+        # degree bookkeeping
+        d_s, d_d = keys_to_edges(n, net_del)
+        i_s, i_d = keys_to_edges(n, net_ins)
+        np.subtract.at(self._outdeg, d_s, 1)
+        np.subtract.at(self._indeg, d_d, 1)
+        np.add.at(self._outdeg, i_s, 1)
+        np.add.at(self._indeg, i_d, 1)
+
+        if (delta.size > self.rebuild_threshold * max(self.m, 1)
+                or self.fragmentation() > self.frag_budget):
+            reason = ("batch_too_large"
+                      if delta.size > self.rebuild_threshold * max(self.m, 1)
+                      else "fragmentation")
+            self._rebuild(reason)
+            stats.rebuilt, stats.rebuild_reason = True, reason
+            stats.host_s = time.perf_counter() - t0
+            return stats
+
+        mig0 = self._pull.migrations + self._fwd.migrations
+        try:
+            for u, v in zip(d_s.tolist(), d_d.tolist()):
+                self._pull.delete(v, u)
+                self._fwd.delete(u, v)
+            for u, v in zip(i_s.tolist(), i_d.tolist()):
+                self._pull.insert(v, u)
+                self._fwd.insert(u, v)
+        except CapacityError as e:
+            # mirrors are mid-edit but the key set is complete: rebuild from it
+            self._rebuild(f"capacity:{e}")
+            stats.rebuilt, stats.rebuild_reason = True, f"capacity:{e}"
+            stats.host_s = time.perf_counter() - t0
+            return stats
+
+        stats.migrations = self._pull.migrations + self._fwd.migrations - mig0
+        stats.host_s = time.perf_counter() - t0
+        t1 = time.perf_counter()
+        rows_p, tiles_p = self._pull.device_refresh()
+        rows_f, tiles_f = self._fwd.device_refresh()
+        touched = np.unique(np.concatenate([d_s, d_d, i_s, i_d]))
+        if touched.size:
+            at = _pad_rows(touched.astype(np.int32),
+                           next_pow2(touched.size))
+            ja = jnp.asarray(at)
+            self._dev_outdeg = _scatter_1d(
+                self._dev_outdeg, ja,
+                jnp.asarray(self._outdeg[at].astype(np.int32)))
+            self._dev_indeg = _scatter_1d(
+                self._dev_indeg, ja,
+                jnp.asarray(self._indeg[at].astype(np.int32)))
+        stats.rows_touched = rows_p + rows_f
+        stats.tiles_touched = tiles_p + tiles_f
+        stats.device_s = time.perf_counter() - t1
+        return stats

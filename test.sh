@@ -1,0 +1,9 @@
+#!/usr/bin/env bash
+# Tier-1 verify in one command: `bash test.sh` (or `bash test.sh tests/test_stream.py`).
+set -euo pipefail
+
+export JAX_ENABLE_X64=1  # allow fp64 (paper uses 64-bit ranks; tau < f32 eps)
+REPO_DIR="$(cd "$(dirname "${BASH_SOURCE[0]}")" && pwd)"
+export PYTHONPATH="${REPO_DIR}/src${PYTHONPATH:+:$PYTHONPATH}"
+
+/usr/bin/env python3 -m pytest -x -q "$@"

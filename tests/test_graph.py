@@ -86,6 +86,21 @@ def test_hybrid_capacity_padding():
     assert int(lay.hi_tmask.sum()) == int(lay0.hi_tmask.sum())
 
 
+def test_hybrid_caps_rebuilds_at_stable_shapes():
+    """hybrid_caps(lay) is the capacity signature: rebuilding a mutated
+    snapshot with it must reproduce identical device shapes (the no-recompile
+    contract the dynamic/stream engines rely on)."""
+    from repro.core import hybrid_caps
+    g = powerlaw_graph(300, 2500, seed=10)
+    lay0 = build_hybrid(g, d_p=8, tile=32, n_hi_cap=64, t_cap=128)
+    g2 = apply_batch(g, random_batch(g, 0.01, seed=11))
+    lay2 = build_hybrid(g2, **hybrid_caps(lay0))
+    assert lay2.ell_idx.shape == lay0.ell_idx.shape
+    assert lay2.hi_ids.shape == lay0.hi_ids.shape
+    assert lay2.hi_tiles.shape == lay0.hi_tiles.shape
+    assert (lay2.d_p, lay2.tile) == (lay0.d_p, lay0.tile)
+
+
 def test_temporal_stream_protocol():
     base, batches = temporal_stream(100, 2000, n_batches=10, seed=10)
     assert len(batches) == 10
