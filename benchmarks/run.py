@@ -6,6 +6,8 @@
   Fig. 1            -> bench_partition  (work-partitioning ablation)
   (beyond paper)    -> bench_fusion     (fused updateRanks accounting)
   (beyond paper)    -> bench_stream     (incremental snapshot vs rebuild)
+  (beyond paper)    -> bench_distributed (single vs 1-D vs 2-D sharded,
+                       static + streamed DF-P; forced host mesh, subprocess)
 
 Prints ``name,us_per_call,derived`` CSV rows.
 """
@@ -14,12 +16,13 @@ import sys
 
 def main() -> None:
     from . import (bench_static, bench_dynamic, bench_sweep, bench_partition,
-                   bench_fusion, bench_stream)
+                   bench_fusion, bench_stream, bench_distributed)
     print("name,us_per_call,derived")
     only = sys.argv[1] if len(sys.argv) > 1 else None
     mods = {"static": bench_static, "dynamic": bench_dynamic,
             "sweep": bench_sweep, "partition": bench_partition,
-            "fusion": bench_fusion, "stream": bench_stream}
+            "fusion": bench_fusion, "stream": bench_stream,
+            "distributed": bench_distributed}
     for key, mod in mods.items():
         if only and key != only:
             continue

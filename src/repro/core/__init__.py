@@ -1,9 +1,11 @@
 """Core library: the paper's contribution (Static + DF/DF-P PageRank) in JAX."""
-from .graph import (Graph, HybridLayout, BatchUpdate, build_graph, build_hybrid,
+from .graph import (Graph, HybridLayout, HybridRows, BatchUpdate, build_graph,
+                    build_hybrid, build_hybrid_rows,
                     apply_batch, random_graph, powerlaw_graph, random_batch,
                     temporal_stream, edge_keys, keys_to_edges,
                     ragged_positions, hybrid_caps, graph_from_sorted_keys)
 from .partition import partition_by_degree, partition_by_degree_jax
+from .rank_step import rank_step, rank_value, relative_change, teleport
 from .pagerank import (DeviceGraph, PRParams, to_device, device_graph,
                        as_device_graph, init_ranks, pull_sum, pull_max,
                        update_ranks, static_pagerank)
@@ -15,11 +17,13 @@ from .compact import (forward_device_graph, dfp_pagerank_compact,
 from .reference import reference_pagerank, numpy_pagerank, l1_error
 
 __all__ = [
-    "Graph", "HybridLayout", "BatchUpdate", "build_graph", "build_hybrid",
+    "Graph", "HybridLayout", "HybridRows", "BatchUpdate", "build_graph",
+    "build_hybrid", "build_hybrid_rows",
     "apply_batch", "random_graph", "powerlaw_graph", "random_batch",
     "temporal_stream", "edge_keys", "keys_to_edges", "ragged_positions",
     "hybrid_caps", "graph_from_sorted_keys",
     "partition_by_degree", "partition_by_degree_jax",
+    "rank_step", "rank_value", "relative_change", "teleport",
     "DeviceGraph", "PRParams", "to_device", "device_graph", "as_device_graph",
     "init_ranks", "pull_sum", "pull_max", "update_ranks", "static_pagerank",
     "initial_affected", "expand_affected", "reach_affected",

@@ -32,6 +32,7 @@ from .dynamic import DeviceBatch, _loop
 from .frontier import expand_affected, initial_affected
 from .graph import Graph, build_hybrid, next_pow2 as _next_pow2
 from .pagerank import DeviceGraph, PRParams, as_device_graph, to_device
+from .rank_step import rank_value, relative_change, teleport
 
 __all__ = ["forward_device_graph", "dfp_pagerank_compact",
            "df_pagerank_compact"]
@@ -111,7 +112,7 @@ def _compact_loop(dg: DeviceGraph, fwd: DeviceGraph, r0, dv0, dn0,
     n = dg.n
     dt = r0.dtype
     d = dg.out_deg.astype(dt)
-    c0 = jnp.asarray((1.0 - params.alpha) / n, dt)
+    c0 = teleport(params.alpha, n, dt)
 
     def body(state):
         r, dv, dn, _, i = state
@@ -123,16 +124,14 @@ def _compact_loop(dg: DeviceGraph, fwd: DeviceGraph, r0, dv0, dn0,
         s = _gather_pull(dg, c, idx, tsel)
         r_i = jnp.take(r, jnp.minimum(idx, n - 1))
         d_i = jnp.take(d, jnp.minimum(idx, n - 1))
-        if prune:
-            rv = (c0 + params.alpha * (s - r_i / d_i)) / \
-                (1 - params.alpha / d_i)
-        else:
-            rv = c0 + params.alpha * s
+        # the compact binding of the shared Eq. 1/Eq. 2 math (core.rank_step):
+        # dead lanes (idx == n) evaluate against r_i so dr/rel read 0 there
+        rv = rank_value(s, r_i, d_i, alpha=params.alpha, c0=c0,
+                        closed_form=prune)
         live = idx < n
+        dr, rel = relative_change(jnp.where(live, rv, r_i), r_i, floor=1e-300)
         rv = jnp.where(live, rv, 0.0)
         r_new = r.at[idx].set(rv, mode="drop")
-        dr = jnp.where(live, jnp.abs(rv - r_i), 0.0)
-        rel = dr / jnp.maximum(jnp.maximum(rv, r_i), 1e-300)
         if prune:
             keep = live & ~(rel <= params.tau_p)
             dv = dv.at[idx].set(False, mode="drop")
@@ -176,9 +175,9 @@ def _df_like_compact(dg, fwd, r_prev, batch: DeviceBatch,
     kn = k
     # No tile compaction: affected hubs legitimately need their full tile
     # lists, and the high side is a small fraction of total edge slots —
-    # the ELL (low-degree majority) is where compaction pays (measured in
-    # EXPERIMENTS.md §Perf: tile truncation forced immediate dense fallback
-    # on power-law graphs, refuting the tile-compaction hypothesis).
+    # the ELL (low-degree majority) is where compaction pays (tile
+    # truncation forced immediate dense fallback on power-law graphs,
+    # refuting the tile-compaction hypothesis — DESIGN.md §4).
     kt = dg.hi_tiles.shape[0]
     dn0 = jnp.zeros((n,), jnp.bool_)
     r, dv, dn, delta, iters = _compact_loop(dg, fwd, r_prev, dv, dn0, params,

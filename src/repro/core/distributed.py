@@ -9,33 +9,61 @@ the paper's "one write per vertex" discipline lifted to the cluster level
 (each device writes only its own rank slice; no cross-device scatter exists).
 
 For DF-P, the frontier flags δ_N ride the same all-gather (packed as f32
-alongside c, one fused collective — see EXPERIMENTS.md §Perf hillclimb).
+alongside c, one fused collective — see DESIGN.md §5).
+
+Layout sharing: each shard's block is laid out by the *same* vectorized
+`build_hybrid_rows` primitive that builds the single-device hybrid
+(DESIGN.md §5) — stored column ids are global, row ids are shard-local —
+and the per-iteration math is the *same* `core.rank_step.rank_step` the
+dense engine uses; this loop only adds the all-gather plumbing around it.
 
 Elasticity: `build_sharded` is a pure host function of (graph, nd); on device
 failure / resize, rebuild with the new nd and re-enter at the checkpointed
-(R, δ_V) — see train/elastic.py for the generic machinery.
+(R, δ_V) — see train/elastic.py for the generic machinery. Capacities follow
+the pow2/never-shrink discipline of DeviceSnapshot (`sharded_caps`), so
+re-sharded snapshots of a dynamic graph keep jit-stable shapes (§7).
 """
 from __future__ import annotations
 
-import dataclasses
 import functools
 from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
-from .graph import Graph, build_hybrid
+from .frontier import initial_affected
+from .graph import Graph, build_hybrid_rows, next_pow2
 from .pagerank import PRParams
+from .rank_step import rank_step
 
 try:  # JAX >= 0.4.35 spelling
     from jax import shard_map as _shard_map
 except ImportError:  # pragma: no cover
     from jax.experimental.shard_map import shard_map as _shard_map
 
-__all__ = ["ShardedGraph", "build_sharded", "distributed_static_pagerank",
-           "distributed_dfp_pagerank", "pagerank_step_specs"]
+
+def shard_map_loop(fn, mesh: Mesh, in_specs, out_specs):
+    """shard_map a while-loop body, portably across JAX versions.
+
+    JAX builds in the 0.4.3x line have no replication rule for `while` and
+    require `check_rep=False`; newer builds dropped the kwarg once the rule
+    existed. All convergence scalars here pass through `pmax` before the
+    loop predicate, so skipping the static replication check is sound.
+    """
+    try:
+        return _shard_map(fn, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=False)
+    except TypeError:  # pragma: no cover - kwarg removed in newer JAX
+        return _shard_map(fn, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs)
+
+__all__ = ["ShardedGraph", "build_sharded", "sharded_caps", "sharded_need",
+           "shard_bounds", "shard_block_rows",
+           "initial_affected_sharded", "shard_vector", "unshard_vector",
+           "distributed_static_pagerank", "distributed_dfp_pagerank",
+           "pagerank_step_specs"]
 
 
 class ShardedGraph(NamedTuple):
@@ -59,13 +87,50 @@ class ShardedGraph(NamedTuple):
         return self.ell_idx.shape[1]
 
 
-def build_sharded(g: Graph, nd: int, d_p: int = 64, tile: int = 1024
-                  ) -> ShardedGraph:
-    """Host-side partitioner: round-robin-free contiguous vertex blocks.
+def shard_bounds(s: int, n_loc: int, n: int) -> Tuple[int, int]:
+    """[lo, hi) of shard s's real vertices, clamped: a trailing shard may be
+    entirely padding (lo == hi == n) when n_loc · nd overshoots |V|."""
+    return min(s * n_loc, n), min((s + 1) * n_loc, n)
 
-    Pads |V| to a multiple of nd with isolated self-loop vertices (masked out
-    of updates and results). Per-shard hi/tile capacities are maxed across
-    shards so stacking gives static shapes (required for jit/shard_map).
+
+def shard_block_rows(g: Graph, s: int, n_loc: int):
+    """(offsets, data) ragged-rows slice of shard s's contiguous vertex
+    block in the transpose CSR — the input `build_hybrid_rows` consumes.
+    Shared by `build_sharded` and the streaming `ShardedSnapshot` so the
+    static and incremental layouts cannot drift."""
+    lo, hi = shard_bounds(s, n_loc, g.n)
+    off = g.t_offsets[lo:hi + 1] - g.t_offsets[lo]
+    dat = g.t_sources[g.t_offsets[lo]:g.t_offsets[hi]]
+    return off, dat
+
+
+def sharded_need(indeg: np.ndarray, nd: int, n_loc: int, d_p: int, tile: int
+                 ) -> Tuple[int, int]:
+    """Worst-shard (high-slot, tile) needs across the contiguous blocks —
+    the raw sizes the pow2 capacity ladder is applied to."""
+    n = int(indeg.shape[0])
+    need_hi = need_t = 1
+    for s in range(nd):
+        lo, hi = shard_bounds(s, n_loc, n)
+        deg_hi = indeg[lo:hi][indeg[lo:hi] > d_p]
+        need_hi = max(need_hi, int(deg_hi.size))
+        need_t = max(need_t, int(((deg_hi + tile - 1) // tile).sum()))
+    return need_hi, need_t
+
+
+def build_sharded(g: Graph, nd: int, d_p: int = 64, tile: int = 1024,
+                  hi_cap: Optional[int] = None, t_cap: Optional[int] = None
+                  ) -> ShardedGraph:
+    """Host-side partitioner: contiguous vertex blocks, one hybrid per shard.
+
+    Pads |V| to a multiple of nd with isolated vertices (masked out of
+    updates and results). Each shard's block is laid out by the shared
+    `build_hybrid_rows` primitive — the same vectorized two-pass fill as the
+    single-device `build_hybrid`, no per-vertex Python loops. Per-shard
+    high/tile capacities are shared across shards so stacking gives static
+    shapes, and default to pow2 of the max per-shard need (never pass
+    smaller values than a previous build when re-sharding a growing graph —
+    `sharded_caps` extracts the current signature).
     """
     n = g.n
     n_pad = ((n + nd - 1) // nd) * nd
@@ -73,66 +138,85 @@ def build_sharded(g: Graph, nd: int, d_p: int = 64, tile: int = 1024
     indeg = g.in_degree()
     out_deg = g.out_degree()
 
-    shards = []
-    for s in range(nd):
-        lo, hi = s * n_loc, min((s + 1) * n_loc, n)
-        rows = np.arange(lo, max(lo, hi))
-        shards.append(rows)
+    # capacity discipline (DeviceSnapshot's pow2/never-shrink ladder): size
+    # for the worst shard so the stacked shapes are jit-stable across shards
+    # and, when the caller threads caps through batches, across snapshots.
+    need_hi, need_t = sharded_need(indeg, nd, n_loc, d_p, tile)
+    if hi_cap is None:
+        hi_cap = next_pow2(need_hi, 8)
+    if t_cap is None:
+        t_cap = next_pow2(need_t, 8)
+    assert need_hi <= hi_cap and need_t <= t_cap, \
+        "sharded caps too small for this snapshot"
 
-    # build per-shard ragged pieces first to find caps
     pieces = []
-    for rows in shards:
-        ell_i = np.zeros((n_loc, d_p), np.int32)
-        ell_m = np.zeros((n_loc, d_p), np.float32)
-        hi_rows = []
-        tiles = []
-        tmask = []
-        rowmap = []
-        for li, v in enumerate(rows):
-            s0, s1 = g.t_offsets[v], g.t_offsets[v + 1]
-            nbr = g.t_sources[s0:s1]
-            if nbr.size <= d_p:
-                ell_i[li, :nbr.size] = nbr
-                ell_m[li, :nbr.size] = 1.0
-            else:
-                slot = len(hi_rows)
-                hi_rows.append(li)
-                nt = (nbr.size + tile - 1) // tile
-                pad = nt * tile - nbr.size
-                padded = np.concatenate([nbr, np.zeros(pad, np.int32)])
-                m = np.concatenate([np.ones(nbr.size, np.float32),
-                                    np.zeros(pad, np.float32)])
-                tiles.append(padded.reshape(nt, tile))
-                tmask.append(m.reshape(nt, tile))
-                rowmap.extend([slot] * nt)
-        pieces.append((ell_i, ell_m, hi_rows, tiles, tmask, rowmap, rows))
+    for s in range(nd):
+        off, dat = shard_block_rows(g, s, n_loc)
+        pieces.append(build_hybrid_rows(off, dat, d_p=d_p, tile=tile,
+                                        n_rows=n_loc, n_hi_cap=hi_cap,
+                                        t_cap=t_cap))
 
-    hi_cap = max(1, max(len(p[2]) for p in pieces))
-    t_cap = max(1, max(len(p[5]) for p in pieces))
-
-    ell_idx = np.stack([p[0] for p in pieces])
-    ell_mask = np.stack([p[1] for p in pieces])
-    hi_pos = np.full((nd, hi_cap), n_loc, np.int32)
-    hi_tiles = np.zeros((nd, t_cap, tile), np.int32)
-    hi_tmask = np.zeros((nd, t_cap, tile), np.float32)
-    hi_rowmap = np.full((nd, t_cap), hi_cap - 1, np.int32)
     deg = np.ones((nd, n_loc), np.int32)
     valid = np.zeros((nd, n_loc), bool)
-    for s, (ei, em, hr, ti, tm, rm, rows) in enumerate(pieces):
-        if hr:
-            hi_pos[s, :len(hr)] = np.asarray(hr, np.int32)
-        if rm:
-            hi_tiles[s, :len(rm)] = np.concatenate(ti, axis=0)
-            hi_tmask[s, :len(rm)] = np.concatenate(tm, axis=0)
-            hi_rowmap[s, :len(rm)] = np.asarray(rm, np.int32)
-        deg[s, :rows.size] = out_deg[rows]
-        valid[s, :rows.size] = True
+    for s in range(nd):
+        lo, hi = shard_bounds(s, n_loc, n)
+        deg[s, :hi - lo] = out_deg[lo:hi]
+        valid[s, :hi - lo] = True
 
     return ShardedGraph(
-        ell_idx=jnp.asarray(ell_idx), ell_mask=jnp.asarray(ell_mask),
-        hi_pos=jnp.asarray(hi_pos), hi_tiles=jnp.asarray(hi_tiles),
-        hi_tmask=jnp.asarray(hi_tmask), hi_rowmap=jnp.asarray(hi_rowmap),
+        ell_idx=jnp.asarray(np.stack([p.ell_idx for p in pieces])),
+        ell_mask=jnp.asarray(np.stack([p.ell_mask for p in pieces])),
+        hi_pos=jnp.asarray(np.stack([p.hi_ids for p in pieces])),
+        hi_tiles=jnp.asarray(np.stack([p.hi_tiles for p in pieces])),
+        hi_tmask=jnp.asarray(np.stack([p.hi_tmask for p in pieces])),
+        hi_rowmap=jnp.asarray(np.stack([p.hi_rowmap for p in pieces])),
         out_deg=jnp.asarray(deg), valid=jnp.asarray(valid), n_true=n)
+
+
+def sharded_caps(sg: ShardedGraph) -> dict:
+    """Capacity signature — pass as **caps to `build_sharded` to rebuild a
+    later snapshot of the same graph with identical device shapes."""
+    return dict(d_p=int(sg.ell_idx.shape[2]), tile=int(sg.hi_tiles.shape[2]),
+                hi_cap=int(sg.hi_pos.shape[1]), t_cap=int(sg.hi_tiles.shape[1]))
+
+
+# ---------------------------------------------------------------------------
+# Host <-> shard staging helpers
+# ---------------------------------------------------------------------------
+
+def shard_vector(x: np.ndarray, nd: int, fill=0) -> jnp.ndarray:
+    """Stack a dense [n] host vector into [nd, n_loc] (pad with `fill`)."""
+    x = np.asarray(x)
+    n = x.shape[0]
+    n_pad = ((n + nd - 1) // nd) * nd
+    if n_pad != n:
+        x = np.concatenate([x, np.full(n_pad - n, fill, x.dtype)])
+    return jnp.asarray(x.reshape(nd, -1))
+
+
+def unshard_vector(x, n: int) -> np.ndarray:
+    """Inverse of `shard_vector`: [nd, n_loc] -> dense host [n]."""
+    return np.asarray(x).reshape(-1)[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("nd", "n_loc"))
+def _initial_affected_stacked(nd, n_loc, del_src, del_dst, ins_src):
+    dv, dn = initial_affected(nd * n_loc, del_src, del_dst, ins_src)
+    return dv.reshape(nd, n_loc), dn.reshape(nd, n_loc)
+
+
+def initial_affected_sharded(nd: int, n_loc: int, batch
+                             ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Paper Alg. 5 initialAffected on the stacked shard layout.
+
+    `batch` is a DeviceBatch (ids may be padded with the id-n sentinel; a
+    sentinel landing on a padding vertex is harmless — padding vertices have
+    `valid=False` and no edges, so neither flag propagates). Returns stacked
+    (δ_V [nd, n_loc], δ_N [nd, n_loc]) ready for `distributed_dfp_pagerank`,
+    which performs the initial frontier expansion device-side at iteration 0.
+    """
+    return _initial_affected_stacked(nd, n_loc, batch.del_src, batch.del_dst,
+                                     batch.ins_src)
 
 
 # ---------------------------------------------------------------------------
@@ -181,12 +265,23 @@ def _squeeze_shard(sgd: dict) -> dict:
 def _make_loop(axis, params: PRParams, n_true: int, *, dfp: bool,
                compact_frontier: bool = False, delta_every: int = 1):
     """Build the per-shard while-loop body. `axis` is the (tuple of) mesh
-    axis name(s) the vertex dimension is sharded over. `compact_frontier`
-    gathers δ_N as uint8 instead of the rank dtype (§Perf hillclimb #3:
-    the frontier all-gather shrinks 4-8x; the pull-max upcasts locally).
-    `delta_every=k` evaluates the global L-inf all-reduce every k iterations
-    only — the straggler/latency mitigation from DESIGN.md §8: up to k-1
-    surplus (cheap, local) iterations traded for k-fold fewer global syncs."""
+    axis name(s) the vertex dimension is sharded over.
+
+    The per-iteration math is `core.rank_step.rank_step` on this shard's
+    slice — the same single implementation the dense engine uses — wrapped
+    in the two collectives the 1-D partition needs: the contribution
+    all-gather and the convergence pmax. Frontier expansion (dfp) pulls the
+    gathered δ_N through the same local layout, *including at iteration 0*,
+    which is the paper's initial expansion (line 9) performed device-side:
+    callers seed δ_N with the updated sources (`initial_affected_sharded`)
+    instead of pre-expanding on the host.
+
+    `compact_frontier` gathers δ_N as uint8 instead of the rank dtype
+    (DESIGN.md §5: the frontier all-gather shrinks 4-8x; the pull-max
+    upcasts locally). `delta_every=k` evaluates the global L-inf all-reduce
+    every k iterations only — the straggler/latency mitigation of DESIGN.md
+    §8: up to k-1 surplus (cheap, local) iterations traded for k-fold fewer
+    global syncs."""
 
     def loop(sgd: dict, r0, dv0, dn0):
         sgl = _squeeze_shard(sgd)
@@ -194,7 +289,6 @@ def _make_loop(axis, params: PRParams, n_true: int, *, dfp: bool,
         dt = r0.dtype
         d = sgl["out_deg"].astype(dt)
         valid = sgl["valid"]
-        c0 = jnp.asarray((1.0 - params.alpha) / n_true, dt)
 
         def body(state):
             r, dv, dn, _, i = state
@@ -202,30 +296,19 @@ def _make_loop(axis, params: PRParams, n_true: int, *, dfp: bool,
                 gdt = jnp.uint8 if compact_frontier else dt
                 dn_full = jax.lax.all_gather(dn.astype(gdt), axis, tiled=True)
                 grow = _local_pull_max(sgl, dn_full.astype(dt)) > 0
-                dv = jnp.where(i > 0, dv | grow, dv) & valid
-            c_loc = r / d
-            c_full = jax.lax.all_gather(c_loc, axis, tiled=True)
+                dv = (dv | grow) & valid
+            c_full = jax.lax.all_gather(r / d, axis, tiled=True)
             s = _local_pull(sgl, c_full)
-            if dfp:
-                rv = (c0 + params.alpha * (s - r / d)) / (1 - params.alpha / d)
-            else:
-                rv = c0 + params.alpha * s
-            aff = dv & valid
-            r_new = jnp.where(aff, rv, r)
-            dr = jnp.abs(r_new - r)
-            rel = dr / jnp.maximum(r_new, r)
-            if dfp:
-                dv = aff & ~(rel <= params.tau_p)
-                dn_new = rel > params.tau_f
-            else:
-                dv = aff
+            r_new, dv, dn_new, local = rank_step(
+                s, r, dv & valid, sgl["out_deg"], alpha=params.alpha,
+                n_norm=n_true, tau_f=params.tau_f, tau_p=params.tau_p,
+                prune=dfp, closed_form=dfp, track_frontier=dfp)
+            if not dfp:
                 dn_new = dn
-            local = jnp.max(dr)
             if delta_every > 1:
                 check = (i + 1) % delta_every == 0
                 delta = jnp.where(check, jax.lax.pmax(local, axis),
                                   jnp.asarray(jnp.inf, dt))
-                delta = jnp.where(check, delta, jnp.asarray(jnp.inf, dt))
             else:
                 delta = jax.lax.pmax(local, axis)
             return r_new, dv, dn_new, delta, i + 1
@@ -264,20 +347,24 @@ def distributed_static_pagerank(mesh: Mesh, sg: ShardedGraph, r0: jnp.ndarray,
     off = jnp.zeros((nd, n_loc), jnp.bool_)
     loop = _make_loop(axis, params, sg.n_true, dfp=False,
                       delta_every=delta_every)
-    fn = _shard_map(loop, mesh=mesh,
-                    in_specs=({k: shard for k in _FIELDS}, shard, shard, shard),
-                    out_specs=(shard, P()))
+    fn = shard_map_loop(loop, mesh,
+                        ({k: shard for k in _FIELDS}, shard, shard, shard),
+                        (shard, P()))
     return jax.jit(fn)(_as_dict(sg), r0, on, off)
 
 
 def distributed_dfp_pagerank(mesh: Mesh, sg: ShardedGraph, r_prev: jnp.ndarray,
                              dv0: jnp.ndarray, dn0: jnp.ndarray,
-                             params: PRParams = PRParams()):
-    """DF-P on the cluster: dv0/dn0 are the initial affected / to-expand flags
-    ([nd, n_loc], from frontier.initial_affected sharded by the host)."""
+                             params: PRParams = PRParams(),
+                             delta_every: int = 1):
+    """DF-P on the cluster: dv0/dn0 are the initial affected / to-expand
+    flags ([nd, n_loc], from `initial_affected_sharded`). Iteration 0 pulls
+    dn0 through the layout — the paper's initial frontier expansion — so
+    callers seed raw flags; pre-expanded dv0 (with dn0 zeroed) also works."""
     axis, shard = _specs(mesh)
-    loop = _make_loop(axis, params, sg.n_true, dfp=True)
-    fn = _shard_map(loop, mesh=mesh,
-                    in_specs=({k: shard for k in _FIELDS}, shard, shard, shard),
-                    out_specs=(shard, P()))
+    loop = _make_loop(axis, params, sg.n_true, dfp=True,
+                      delta_every=delta_every)
+    fn = shard_map_loop(loop, mesh,
+                        ({k: shard for k in _FIELDS}, shard, shard, shard),
+                        (shard, P()))
     return jax.jit(fn)(_as_dict(sg), r_prev, dv0, dn0)

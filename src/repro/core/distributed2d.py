@@ -1,4 +1,4 @@
-"""2-D edge-partitioned PageRank (beyond-paper; EXPERIMENTS.md §Perf #3).
+"""2-D edge-partitioned PageRank (beyond-paper; DESIGN.md §6).
 
 The paper's pull model on a 1-D vertex partition all-gathers the FULL
 contribution vector c (V·4 B per device per iteration) — collective-bound at
@@ -26,13 +26,10 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
+from .distributed import shard_map_loop
 from .graph import Graph
 from .pagerank import PRParams
-
-try:
-    from jax import shard_map as _shard_map
-except ImportError:  # pragma: no cover
-    from jax.experimental.shard_map import shard_map as _shard_map
+from .rank_step import rank_step
 
 __all__ = ["Sharded2D", "build_sharded_2d", "pagerank_2d", "dfp_2d"]
 
@@ -112,18 +109,23 @@ def build_sharded_2d(g: Graph, r: int, c: int, d_p: int = 8) -> Sharded2D:
 
 def _loop_2d(params: PRParams, n_true: int, r: int, c: int, *, dfp: bool,
              row_axis="data", col_axis="model"):
-    """Per-device while loop. Mesh axes: row_axis size r, col_axis size c."""
+    """Per-device while loop. Mesh axes: row_axis size r, col_axis size c.
+
+    The per-iteration math is the shared `core.rank_step.rank_step` on the
+    owned vertex block; this loop supplies only the blocked pull schedule
+    (all-gather along the column axis, psum-scatter along the row axis,
+    ppermute back to the owner — DESIGN.md §6). Frontier expansion runs at
+    iteration 0 too, so δ_N may be seeded raw (paper's initial expansion,
+    device-side) exactly as in the 1-D engine."""
 
     def loop(sgd, r0, dv0, dn0):
         ell_idx = sgd["ell_idx"][0]
         ell_mask = sgd["ell_mask"][0]
-        deg = sgd["out_deg"][0].astype(r0.dtype)
+        out_deg = sgd["out_deg"][0]
+        deg = out_deg.astype(r0.dtype)
         valid = sgd["valid"][0]
         rank0, dv0, dn0 = r0[0], dv0[0], dn0[0]
         dt = rank0.dtype
-        c0 = jnp.asarray((1.0 - params.alpha) / n_true, dt)
-        j_id = jax.lax.axis_index(col_axis)
-        i_id = jax.lax.axis_index(row_axis)
 
         def pull(vec_own):
             """vec_own [blk] -> per-destination sums [v_r] -> own piece."""
@@ -144,21 +146,15 @@ def _loop_2d(params: PRParams, n_true: int, r: int, c: int, *, dfp: bool,
             rank, dv, dn, _, it = state
             if dfp:
                 grow = pull(dn.astype(dt)) > 0          # Σ>0 ⇔ OR
-                dv = jnp.where(it > 0, dv | grow, dv) & valid
+                dv = (dv | grow) & valid
             s = pull(rank / deg)
+            r_new, dv_new, dn_new, local = rank_step(
+                s, rank, dv & valid, out_deg, alpha=params.alpha,
+                n_norm=n_true, tau_f=params.tau_f, tau_p=params.tau_p,
+                prune=dfp, closed_form=dfp, track_frontier=dfp)
             if dfp:
-                rv = (c0 + params.alpha * (s - rank / deg)) \
-                    / (1 - params.alpha / deg)
-            else:
-                rv = c0 + params.alpha * s
-            aff = dv & valid
-            r_new = jnp.where(aff, rv, rank)
-            dr = jnp.abs(r_new - rank)
-            rel = dr / jnp.maximum(r_new, rank)
-            if dfp:
-                dv = aff & ~(rel <= params.tau_p)
-                dn = rel > params.tau_f
-            delta = jax.lax.pmax(jnp.max(dr), (row_axis, col_axis))
+                dv, dn = dv_new, dn_new
+            delta = jax.lax.pmax(local, (row_axis, col_axis))
             return r_new, dv, dn, delta, it + 1
 
         def cond(state):
@@ -181,9 +177,9 @@ def _run(mesh: Mesh, sg: Sharded2D, r0, dv0, dn0, params, dfp: bool):
            "out_deg": sg.out_deg, "valid": sg.valid}
     loop = _loop_2d(params, sg.n_true, sg.r, sg.c, dfp=dfp,
                     row_axis=row_axis, col_axis=col_axis)
-    fn = _shard_map(loop, mesh=mesh,
-                    in_specs=({k: shard for k in sgd}, shard, shard, shard),
-                    out_specs=(shard, P()))
+    fn = shard_map_loop(loop, mesh,
+                        ({k: shard for k in sgd}, shard, shard, shard),
+                        (shard, P()))
     return jax.jit(fn)(sgd, r0, dv0, dn0)
 
 

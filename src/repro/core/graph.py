@@ -24,6 +24,7 @@ import numpy as np
 __all__ = [
     "Graph",
     "HybridLayout",
+    "HybridRows",
     "BatchUpdate",
     "build_graph",
     "add_self_loops",
@@ -36,6 +37,7 @@ __all__ = [
     "keys_to_edges",
     "next_pow2",
     "ragged_positions",
+    "build_hybrid_rows",
     "hybrid_caps",
     "graph_from_sorted_keys",
 ]
@@ -249,41 +251,84 @@ class HybridLayout:
         return int(self.hi_ids.shape[0])
 
 
-def build_hybrid(g: Graph, d_p: int = 64, tile: int = 1024,
-                 n_hi_cap: Optional[int] = None,
-                 t_cap: Optional[int] = None) -> HybridLayout:
-    """Partition vertices by in-degree (Alg. 4) and build the hybrid layout.
+@dataclasses.dataclass(frozen=True)
+class HybridRows:
+    """Hybrid ELL + tiled-CSR layout of `n_rows` ragged rows — one
+    orientation, no graph semantics attached.
 
-    `n_hi_cap` / `t_cap` allow fixed capacities across dynamic snapshots so the
-    jitted update never recompiles; they default to the exact current sizes.
+    This is the layout *primitive* both scales share: `build_hybrid` wraps it
+    for the single-device full graph (row = vertex, ids = global), and
+    `core.distributed.build_sharded` stacks one per shard (row = local
+    vertex, stored ids = global column ids). Field conventions match
+    `HybridLayout`: `hi_ids` holds row ids with sentinel `n_rows` for unused
+    slots, `hi_rowmap` points pad tiles at slot `n_hi_cap - 1` (mask 0).
     """
-    from .partition import partition_by_degree
 
-    indeg = g.in_degree()
-    perm, n_low = partition_by_degree(indeg, d_p)
-    is_low = indeg <= d_p
-    n = g.n
+    d_p: int
+    tile: int
+    ell_idx: np.ndarray     # [n_rows, d_p] int32
+    ell_mask: np.ndarray    # [n_rows, d_p] f32
+    hi_ids: np.ndarray      # [n_hi_cap]    int32 (sentinel = n_rows)
+    hi_tiles: np.ndarray    # [t_cap, tile] int32
+    hi_tmask: np.ndarray    # [t_cap, tile] f32
+    hi_rowmap: np.ndarray   # [t_cap]       int32
+    is_low: np.ndarray      # [n_rows]      bool
+    row_deg: np.ndarray     # [n_rows]      int64
+
+    @property
+    def n(self) -> int:
+        return int(self.is_low.shape[0])
+
+    @property
+    def n_hi_cap(self) -> int:
+        return int(self.hi_ids.shape[0])
+
+
+def build_hybrid_rows(offsets: np.ndarray, data: np.ndarray,
+                      d_p: int = 64, tile: int = 1024,
+                      n_rows: Optional[int] = None,
+                      n_hi_cap: Optional[int] = None,
+                      t_cap: Optional[int] = None) -> HybridRows:
+    """Vectorized hybrid layout of ragged rows (the shared Alg. 4 split).
+
+    `offsets` [k+1] / `data` [offsets[-1]] describe k ragged rows; `n_rows`
+    (>= k, default k) pads trailing empty rows so callers can present a
+    fixed row capacity (sharded blocks pad |V| to a multiple of the shard
+    count). Rows with more than `d_p` entries go to the tiled-CSR side.
+    `n_hi_cap` / `t_cap` fix the high-side capacities so repeated builds
+    keep identical device shapes; they default to the exact current sizes.
+    Two vectorized ragged-fill passes — no per-row Python loop.
+    """
+    offsets = np.asarray(offsets, np.int64)
+    data = np.asarray(data, np.int32)
+    k = int(offsets.shape[0]) - 1
+    if n_rows is None:
+        n_rows = k
+    assert n_rows >= k, "n_rows smaller than the described row count"
+    deg = np.zeros(n_rows, np.int64)
+    deg[:k] = np.diff(offsets)
+    is_low = deg <= d_p
 
     # --- ELL side (one vectorized ragged-fill pass) ------------------------
-    ell_idx = np.zeros((n, d_p), dtype=np.int32)
-    ell_mask = np.zeros((n, d_p), dtype=np.float32)
-    low = np.nonzero(is_low)[0]
+    ell_idx = np.zeros((n_rows, d_p), dtype=np.int32)
+    ell_mask = np.zeros((n_rows, d_p), dtype=np.float32)
+    low = np.nonzero(is_low[:k])[0]   # rows >= k are empty, nothing to fill
     if low.size:
-        deg_low = indeg[low].astype(np.int64)
+        deg_low = deg[low]
         rows = np.repeat(low, deg_low)
         pos = ragged_positions(deg_low)
-        src_at = np.repeat(g.t_offsets[low], deg_low) + pos
-        ell_idx[rows, pos] = g.t_sources[src_at]
+        src_at = np.repeat(offsets[low], deg_low) + pos
+        ell_idx[rows, pos] = data[src_at]
         ell_mask[rows, pos] = 1.0
 
-    # --- tiled CSR side (single scatter; no per-vertex Python loop) --------
+    # --- tiled CSR side (single scatter; no per-row Python loop) -----------
     hi = np.nonzero(~is_low)[0].astype(np.int32)
     n_hi = int(hi.size)
     if n_hi_cap is None:
         n_hi_cap = max(n_hi, 1)
     assert n_hi <= n_hi_cap, "n_hi_cap too small for this snapshot"
-    deg_hi = indeg[hi].astype(np.int64)
-    nt_per = (deg_hi + tile - 1) // tile            # tiles per high vertex
+    deg_hi = deg[hi]
+    nt_per = (deg_hi + tile - 1) // tile            # tiles per high row
     nt_total = int(nt_per.sum())
     if t_cap is None:
         t_cap = max(nt_total, 1)
@@ -292,25 +337,44 @@ def build_hybrid(g: Graph, d_p: int = 64, tile: int = 1024,
     hi_tmask = np.zeros((t_cap, tile), dtype=np.float32)
     hi_rowmap = np.full(t_cap, n_hi_cap - 1, dtype=np.int32)  # pad tiles -> last slot, mask=0
     if nt_total:
-        # flat position of every high edge inside the [t_cap*tile] tile pool:
-        # per-vertex base (cumsum of nt*tile) + within-vertex edge position
+        # flat position of every high entry inside the [t_cap*tile] pool:
+        # per-row base (cumsum of nt*tile) + within-row position
         base = np.cumsum(nt_per * tile) - nt_per * tile
         pos = ragged_positions(deg_hi)
         flat_at = np.repeat(base, deg_hi) + pos
-        src_at = np.repeat(g.t_offsets[hi], deg_hi) + pos
-        flat_tiles = hi_tiles.reshape(-1)
-        flat_tmask = hi_tmask.reshape(-1)
-        flat_tiles[flat_at] = g.t_sources[src_at]
-        flat_tmask[flat_at] = 1.0
+        src_at = np.repeat(offsets[hi], deg_hi) + pos
+        hi_tiles.reshape(-1)[flat_at] = data[src_at]
+        hi_tmask.reshape(-1)[flat_at] = 1.0
         hi_rowmap[:nt_total] = np.repeat(
             np.arange(n_hi, dtype=np.int32), nt_per)
-    hi_ids = np.full(n_hi_cap, n, dtype=np.int32)  # sentinel n = "no vertex"
+    hi_ids = np.full(n_hi_cap, n_rows, dtype=np.int32)  # sentinel = "no row"
     hi_ids[:n_hi] = hi
 
+    return HybridRows(d_p=d_p, tile=tile, ell_idx=ell_idx, ell_mask=ell_mask,
+                      hi_ids=hi_ids, hi_tiles=hi_tiles, hi_tmask=hi_tmask,
+                      hi_rowmap=hi_rowmap, is_low=is_low, row_deg=deg)
+
+
+def build_hybrid(g: Graph, d_p: int = 64, tile: int = 1024,
+                 n_hi_cap: Optional[int] = None,
+                 t_cap: Optional[int] = None) -> HybridLayout:
+    """Partition vertices by in-degree (Alg. 4) and build the hybrid layout.
+
+    A thin graph-aware wrapper over `build_hybrid_rows` (rows = in-neighbor
+    lists of the transpose CSR). `n_hi_cap` / `t_cap` allow fixed capacities
+    across dynamic snapshots so the jitted update never recompiles; they
+    default to the exact current sizes.
+    """
+    from .partition import partition_by_degree
+
+    indeg = g.in_degree()
+    perm, n_low = partition_by_degree(indeg, d_p)
+    hr = build_hybrid_rows(g.t_offsets, g.t_sources, d_p=d_p, tile=tile,
+                           n_hi_cap=n_hi_cap, t_cap=t_cap)
     return HybridLayout(
-        d_p=d_p, tile=tile, ell_idx=ell_idx, ell_mask=ell_mask,
-        hi_ids=hi_ids, hi_tiles=hi_tiles, hi_tmask=hi_tmask,
-        hi_rowmap=hi_rowmap, is_low=is_low, out_deg=g.out_degree(),
+        d_p=d_p, tile=tile, ell_idx=hr.ell_idx, ell_mask=hr.ell_mask,
+        hi_ids=hr.hi_ids, hi_tiles=hr.hi_tiles, hi_tmask=hr.hi_tmask,
+        hi_rowmap=hr.hi_rowmap, is_low=hr.is_low, out_deg=g.out_degree(),
         perm=perm, n_low=int(n_low))
 
 

@@ -20,6 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .graph import Graph, HybridLayout, build_hybrid
+from .rank_step import rank_step
 
 __all__ = [
     "DeviceGraph", "to_device", "as_device_graph", "pull_sum", "pull_max",
@@ -158,32 +159,16 @@ def update_ranks(dg: DeviceGraph, r: jnp.ndarray, affected: jnp.ndarray,
     `prune=False`, `closed_form=False`, `track_frontier=False` this *is* the
     static kernel (paper: "disable the affected flags to utilize the same
     function for Static PageRank").
+
+    This is the dense-engine binding of `core.rank_step.rank_step` — the
+    repo-wide single implementation of the Eq. 1/Eq. 2 math — to the hybrid
+    pull primitive above.
     """
     psum = pull_sum_fn or pull_sum
-    dt = r.dtype
-    n = dg.n
-    d = dg.out_deg.astype(dt)
-    c0 = jnp.asarray((1.0 - alpha) / n, dt)
-    c = r / d
-    s = psum(dg, c)
-    if closed_form:
-        # Eq. 2: absorb the guaranteed self-loop analytically
-        k = s - r / d
-        rv = (c0 + alpha * k) / (1.0 - alpha / d)
-    else:
-        rv = c0 + alpha * s
-    r_new = jnp.where(affected, rv, r)
-    dr = jnp.abs(r_new - r)
-    rel = dr / jnp.maximum(r_new, r)
-    if prune:
-        affected = affected & ~(rel <= tau_p)
-    if track_frontier:
-        # rel == 0 for unaffected vertices (r_new == r there), so this matches
-        # the paper's "if affected and Δr/max(r,R[v]) > τ_f" exactly.
-        delta_n = rel > tau_f
-    else:
-        delta_n = jnp.zeros((n,), dtype=jnp.bool_)
-    return r_new, affected, delta_n, jnp.max(dr)
+    s = psum(dg, r / dg.out_deg.astype(r.dtype))
+    return rank_step(s, r, affected, dg.out_deg, alpha=alpha, n_norm=dg.n,
+                     tau_f=tau_f, tau_p=tau_p, prune=prune,
+                     closed_form=closed_form, track_frontier=track_frontier)
 
 
 # ---------------------------------------------------------------------------

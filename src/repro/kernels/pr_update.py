@@ -8,8 +8,8 @@ Fuses, in one VMEM pass per vertex tile:
 
 On the GPU these are 3-4 passes (update kernel pair + norm kernel pair +
 flag updates); here a single kernel emits all five outputs — one write per
-vertex per output, atomics-free (see EXPERIMENTS.md §Perf for the fusion
-accounting). The in-neighbor reduction itself arrives pre-reduced in
+vertex per output, atomics-free (benchmarks/bench_fusion.py tracks the
+fusion accounting). The in-neighbor reduction itself arrives pre-reduced in
 ``contrib`` (from ell_pull/csr_block_pull or the XLA gather path).
 """
 from __future__ import annotations
@@ -19,6 +19,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from ..core.rank_step import rank_value, relative_change
 
 __all__ = ["pr_update"]
 
@@ -31,14 +33,13 @@ def _kernel(contrib_ref, r_ref, deg_ref, aff_ref,
     contrib = contrib_ref[...]
     d = deg_ref[...].astype(dt)
     aff = aff_ref[...] > 0
+    # the shared Eq. 1/Eq. 2 math (core.rank_step) — same formulas the XLA
+    # engines use, fused here with the norm partials and flag updates
     c0 = jnp.asarray((1.0 - alpha) * inv_n, dt)
-    if closed_form:
-        rv = (c0 + alpha * (contrib - r / d)) / (1.0 - alpha / d)
-    else:
-        rv = c0 + alpha * contrib
+    rv = rank_value(contrib, r, d, alpha=alpha, c0=c0,
+                    closed_form=closed_form)
     r_new = jnp.where(aff, rv, r)
-    dr = jnp.abs(r_new - r)
-    rel = dr / jnp.maximum(r_new, r)
+    dr, rel = relative_change(r_new, r)
     if prune:
         aff = aff & ~(rel <= tau_p)
     rnew_ref[...] = r_new

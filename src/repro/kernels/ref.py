@@ -2,6 +2,11 @@
 
 Each function has the exact same signature/semantics as the corresponding
 kernel wrapper in ``ops.py``; tests sweep shapes/dtypes and assert_allclose.
+
+NOTE: `pr_update_ref` intentionally does NOT import `core.rank_step` — it
+is the independent check on the kernel (which does import the shared
+math), so sharing code here would let a bug in `rank_step` cancel out.
+The engine-side single-implementation rule applies to engines, not oracles.
 """
 from __future__ import annotations
 

@@ -7,12 +7,13 @@ per-batch latency accounting. See DESIGN.md §3.
 """
 from .delta import Delta, ingest, next_pow2
 from .snapshot import CapacityError, DeviceSnapshot, SnapshotStats
+from .sharded import ShardedSnapshot
 from .session import BatchStats, StreamSession
 from .replay import ReplayRecord, replay, churn_workload
 
 __all__ = [
     "Delta", "ingest", "next_pow2",
-    "CapacityError", "DeviceSnapshot", "SnapshotStats",
+    "CapacityError", "DeviceSnapshot", "SnapshotStats", "ShardedSnapshot",
     "BatchStats", "StreamSession",
     "ReplayRecord", "replay", "churn_workload",
 ]

@@ -14,7 +14,6 @@ from typing import Callable, Iterable, List, Optional
 import numpy as np
 
 from ..core.graph import BatchUpdate, Graph, random_batch
-from ..core.pagerank import init_ranks, static_pagerank
 from ..core.reference import l1_error
 from .session import BatchStats, StreamSession
 
@@ -43,12 +42,13 @@ def replay(session: StreamSession, batches: Iterable[BatchUpdate],
     maintenance (ranks must track the from-scratch answer)."""
     records: List[ReplayRecord] = []
     for t, b in enumerate(batches):
-        ranks = session.apply(b)
+        session.apply(b)
         err = None
         if verify_every and (t + 1) % verify_every == 0:
-            ref, _ = static_pagerank(session.snap.dg,
-                                     init_ranks(session.n), session.params)
-            err = l1_error(np.asarray(ranks), np.asarray(ref))
+            # session-mode-agnostic: flat_ranks/static_reference cover both
+            # the single-device and the sharded (mesh=) sessions
+            err = l1_error(np.asarray(session.flat_ranks()),
+                           np.asarray(session.static_reference()))
         rec = ReplayRecord(t=t, stats=session.history[-1], l1_vs_static=err)
         records.append(rec)
         if on_batch is not None:

@@ -1,8 +1,9 @@
 """StreamSession — chained DF-P PageRank over a continuous update stream.
 
-The session keeps everything resident across batches: ranks, both hybrid
-graph layouts (via the incremental ``DeviceSnapshot``), and the jit caches
-of the DF-P engines. ``apply(batch)`` is the full per-batch lifecycle:
+The session keeps everything resident across batches: ranks, the hybrid
+graph layouts (via the incremental ``DeviceSnapshot`` — or the stacked
+``ShardedSnapshot`` when a ``mesh`` is given), and the jit caches of the
+DF-P engines. ``apply(batch)`` is the full per-batch lifecycle:
 
   ingest Δ^t  ->  in-place snapshot update  ->  DF-P from previous ranks
 
@@ -11,6 +12,13 @@ the initial frontier is a small fraction of |V|) and the **dense** engine
 (full-width masked sweeps, right when the batch is large — and the internal
 fallback of the compact engine anyway). The engine handoff mirrors
 DESIGN.md §4: capacity guesses never affect correctness, only speed.
+
+Multi-device mode (``mesh=``): ranks live sharded [nd, n_loc], snapshot
+maintenance scatters only touched rows of the stacked layout, and every
+batch routes through ``distributed_dfp_pagerank`` with the initial frontier
+seeded device-side (`initial_affected_sharded`; the engine performs the
+paper's initial expansion at iteration 0) — chained multi-device DF-P over
+a continuous stream, same lifecycle, same accounting (DESIGN.md §7).
 """
 from __future__ import annotations
 
@@ -23,10 +31,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.compact import df_pagerank_compact, dfp_pagerank_compact
+from ..core.distributed import (distributed_dfp_pagerank,
+                                distributed_static_pagerank,
+                                initial_affected_sharded)
 from ..core.dynamic import df_pagerank, dfp_pagerank
 from ..core.graph import BatchUpdate, Graph
 from ..core.pagerank import PRParams, init_ranks, static_pagerank
 from .delta import Delta, ingest
+from .sharded import ShardedSnapshot
 from .snapshot import DeviceSnapshot, SnapshotStats
 
 __all__ = ["StreamSession", "BatchStats", "choose_engine"]
@@ -72,12 +84,17 @@ class StreamSession:
     >>> for batch in batches:
     ...     ranks = sess.apply(batch)
     >>> ids, vals = sess.topk(10)
+
+    Multi-device: pass ``mesh=jax.make_mesh(...)`` — the session shards the
+    snapshot over all mesh devices and chains the 1-D distributed DF-P
+    engine instead (``engine``/``prune``/``compact_threshold`` apply only to
+    the single-device path; sharded DF-P always prunes).
     """
 
     def __init__(self, g: Graph, params: Optional[PRParams] = None,
                  d_p: int = 64, tile: int = 256, engine: str = "auto",
                  prune: bool = True, compact_threshold: float = 0.015,
-                 snapshot: Optional[DeviceSnapshot] = None, **snap_kw):
+                 snapshot=None, mesh=None, **snap_kw):
         if engine not in ("auto", "dense", "compact"):
             raise ValueError(f"unknown engine: {engine!r}")
         # Session default: frontier thresholds at 1e-9 (vs the one-shot
@@ -91,10 +108,15 @@ class StreamSession:
         self.engine = engine
         self.prune = prune
         self.compact_threshold = compact_threshold
-        self.snap = snapshot if snapshot is not None else DeviceSnapshot(
-            g, d_p=d_p, tile=tile, **snap_kw)
-        self.ranks, self._init_iters = static_pagerank(
-            self.snap.dg, init_ranks(self.snap.n), self.params)
+        self.mesh = mesh
+        if mesh is not None:
+            nd = int(mesh.devices.size)
+            self.snap = snapshot if snapshot is not None else ShardedSnapshot(
+                g, nd=nd, d_p=d_p, tile=tile, **snap_kw)
+        else:
+            self.snap = snapshot if snapshot is not None else DeviceSnapshot(
+                g, d_p=d_p, tile=tile, **snap_kw)
+        self.ranks, self._init_iters = self._static_solve()
         self.history: List[BatchStats] = []
 
     @property
@@ -108,7 +130,8 @@ class StreamSession:
     # -- the streaming API ---------------------------------------------------
 
     def apply(self, batch: BatchUpdate | Delta) -> jnp.ndarray:
-        """Apply Δ^t and return the new rank vector (device-resident)."""
+        """Apply Δ^t and return the new rank vector (device-resident;
+        stacked [nd, n_loc] in mesh mode — see `flat_ranks`)."""
         t0 = time.perf_counter()
         delta = batch if isinstance(batch, Delta) else ingest(batch, self.n)
         db = delta.to_device()
@@ -118,7 +141,12 @@ class StreamSession:
 
         t1 = time.perf_counter()
         engine = self._choose_engine(delta)
-        if engine == "compact":
+        if engine == "sharded":
+            dv0, dn0 = initial_affected_sharded(
+                self.snap.nd, self.snap.n_loc, db)
+            r, iters = distributed_dfp_pagerank(
+                self.mesh, self.snap.sg, self.ranks, dv0, dn0, self.params)
+        elif engine == "compact":
             fn = dfp_pagerank_compact if self.prune else df_pagerank_compact
             r, iters = fn(self.snap, None, self.ranks, db, self.params)
         else:
@@ -134,19 +162,47 @@ class StreamSession:
         return r
 
     def _choose_engine(self, delta: Delta) -> str:
+        if self.mesh is not None:
+            return "sharded"
         if self.engine != "auto":
             return self.engine
         return choose_engine(delta, self.snap._outdeg, self.n,
                              self.compact_threshold)
 
+    def _static_solve(self):
+        """From-scratch static solve on the current snapshot, in the
+        session's native rank layout (dense [n], or stacked [nd, n_loc] in
+        mesh mode). The single place the recipe lives: init vector, engine
+        choice and params stay in lock-step across __init__ /
+        static_reference / recompute."""
+        if self.mesh is None:
+            return static_pagerank(self.snap.dg, init_ranks(self.n),
+                                   self.params)
+        r0 = jnp.full((self.snap.nd, self.snap.n_loc), 1.0 / self.n,
+                      init_ranks(1).dtype)
+        return distributed_static_pagerank(self.mesh, self.snap.sg, r0,
+                                           self.params)
+
+    def _flatten(self, r: jnp.ndarray) -> jnp.ndarray:
+        return r if self.mesh is None else jnp.reshape(r, (-1,))[:self.n]
+
+    def flat_ranks(self) -> jnp.ndarray:
+        """Current ranks as a dense [n] vector regardless of session mode."""
+        return self._flatten(self.ranks)
+
+    def static_reference(self) -> jnp.ndarray:
+        """From-scratch static solve on the *current* snapshot, dense [n] —
+        the verification anchor for the chained DF-P ranks. Does not touch
+        session state."""
+        return self._flatten(self._static_solve()[0])
+
     def topk(self, k: int) -> Tuple[np.ndarray, np.ndarray]:
         """Top-k vertices by rank: (ids [k], ranks [k]), descending."""
-        vals, ids = jax.lax.top_k(self.ranks, k)
+        vals, ids = jax.lax.top_k(self.flat_ranks(), k)
         return np.asarray(ids), np.asarray(vals)
 
     def recompute(self) -> jnp.ndarray:
         """Full static recomputation on the current snapshot (re-sync /
         verification anchor); resets the session's rank state."""
-        self.ranks, _ = static_pagerank(
-            self.snap.dg, init_ranks(self.n), self.params)
+        self.ranks, _ = self._static_solve()
         return self.ranks

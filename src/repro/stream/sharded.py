@@ -1,0 +1,237 @@
+"""Incrementally maintained sharded snapshots — multi-device streaming.
+
+``ShardedSnapshot`` is the multi-device sibling of ``DeviceSnapshot``: it
+owns the stacked per-shard hybrid layout of the current graph G^t (the
+``ShardedGraph`` consumed by ``core.distributed``) and applies a canonical
+``Delta`` *in place* — O(|Δ| · d_p) host bookkeeping on per-shard
+``_HalfLayout`` mirrors plus O(touched rows) scatters into the stacked
+device arrays — instead of the O(|E|) re-partition + full restage
+(`apply_batch` + `build_sharded`) the static sharded pipeline pays per
+batch (DESIGN.md §7).
+
+Reuse, not reimplementation: each shard's host mirror IS the single-device
+`_HalfLayout` machinery (ELL fill-cursor edits, tile free lists, degree-
+crossing migration with hysteresis) instantiated on that shard's
+`build_hybrid_rows` block — row ids local, stored column ids global. Only
+the device residency differs: arrays are stacked [nd, ...] so shard_map can
+consume them, and the refresh scatters land at [shard, rows].
+
+Only the pull orientation is maintained. The 1-D distributed DF-P engine
+expands its frontier by pulling the all-gathered δ_N through the same pull
+layout (no forward orientation exists at this scale), so half the
+maintenance work of the single-device snapshot simply disappears.
+
+Capacity discipline matches DeviceSnapshot: per-shard hi/tile caps are pow2
+with headroom, shared across shards (stacking needs equal shapes), and
+never shrink on rebuild — only genuine pow2 growth changes device shapes /
+retriggers jit. Rebuild fallback (capacity exhaustion, fragmentation over
+budget, batch above the cost crossover) routes through
+`graph_from_sorted_keys` + per-shard `build_hybrid_rows` at fixed caps.
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.distributed import (ShardedGraph, shard_block_rows, shard_bounds,
+                                sharded_need)
+from ..core.graph import (Graph, build_hybrid_rows, edge_keys,
+                          graph_from_sorted_keys, next_pow2)
+from .delta import Delta
+from .snapshot import (CapacityError, SnapshotStats, _HalfLayout, _pad_rows,
+                       _scatter_1d, apply_net_delta, rebuild_reason)
+
+__all__ = ["ShardedSnapshot"]
+
+
+@jax.jit
+def _scatter_shard_rows(arr, s, rows, vals):
+    """arr [nd, R, ...] <- vals at [s, rows]; rows pre-padded (duplicates OK,
+    padded lanes re-write identical values)."""
+    return arr.at[s, rows].set(vals)
+
+
+class ShardedSnapshot:
+    """Stacked per-shard hybrid layouts of G^t, maintained incrementally.
+
+    Exposes `.sg` — the `ShardedGraph` the distributed engines accept — and
+    the same `apply(delta) -> SnapshotStats` lifecycle as `DeviceSnapshot`.
+    Vertex v lives on shard `v // n_loc` at local row `v % n_loc`
+    (contiguous blocks, identical to `build_sharded`).
+    """
+
+    def __init__(self, g: Graph, nd: int, d_p: int = 64, tile: int = 256,
+                 hi_headroom: float = 2.0, tile_headroom: float = 2.0,
+                 rebuild_threshold: float = 0.05, frag_budget: float = 0.6,
+                 low_water: Optional[int] = None):
+        self.n = g.n
+        self.nd = nd
+        self.n_pad = ((g.n + nd - 1) // nd) * nd
+        self.n_loc = self.n_pad // nd
+        self.d_p, self.tile = d_p, tile
+        self.rebuild_threshold = rebuild_threshold
+        self.frag_budget = frag_budget
+        self._low_water = low_water
+        self._hi_headroom, self._tile_headroom = hi_headroom, tile_headroom
+        src, dst = g.edges()
+        self._keys = np.sort(edge_keys(g.n, src, dst))
+        self._indeg = g.in_degree().astype(np.int64)
+        self._outdeg = g.out_degree().astype(np.int64)
+        # valid is static: the vertex set never changes across the stream
+        valid = np.zeros(self.n_pad, bool)
+        valid[:self.n] = True
+        self._dev_valid = jnp.asarray(valid.reshape(nd, self.n_loc))
+        self._adopt(g)
+        self._last_rebuild_reason = ""
+
+    # -- construction / rebuild ---------------------------------------------
+
+    def _caps_for(self, indeg: np.ndarray) -> dict:
+        """Worst-shard high/tile needs, pow2 with headroom (shared caps)."""
+        need_hi, need_t = sharded_need(indeg, self.nd, self.n_loc,
+                                       self.d_p, self.tile)
+        return dict(
+            hi_cap=next_pow2(int(need_hi * self._hi_headroom), 8),
+            t_cap=next_pow2(int(need_t * self._tile_headroom), 8))
+
+    def _adopt(self, g: Graph, caps: Optional[dict] = None) -> None:
+        """(Re)build every shard's half from a host Graph at fixed caps."""
+        caps = caps or self._caps_for(self._indeg)
+        self._caps = caps
+        self._halves: List[_HalfLayout] = []
+        for s in range(self.nd):
+            off, dat = shard_block_rows(g, s, self.n_loc)
+            hr = build_hybrid_rows(off, dat, d_p=self.d_p, tile=self.tile,
+                                   n_rows=self.n_loc,
+                                   n_hi_cap=caps["hi_cap"],
+                                   t_cap=caps["t_cap"])
+            lo, hi = shard_bounds(s, self.n_loc, self.n)
+            row_deg = np.zeros(self.n_loc, np.int64)
+            row_deg[:hi - lo] = self._indeg[lo:hi]
+            half = _HalfLayout(hr, row_deg, stage_device=False)
+            if self._low_water is not None:
+                half.low_water = self._low_water
+            self._halves.append(half)
+        # stacked device residency (copies: the mirrors mutate in place)
+        self.dev_ell_idx = jnp.asarray(
+            np.stack([h.ell_idx for h in self._halves]))
+        self.dev_ell_mask = jnp.asarray(
+            np.stack([h.ell_mask for h in self._halves]))
+        self.dev_hi_tiles = jnp.asarray(
+            np.stack([h.hi_tiles for h in self._halves]))
+        self.dev_hi_tmask = jnp.asarray(
+            np.stack([h.hi_tmask for h in self._halves]))
+        self.dev_hi_rowmap = jnp.asarray(
+            np.stack([h.hi_rowmap for h in self._halves]))
+        self.dev_hi_pos = jnp.asarray(
+            np.stack([h.hi_ids for h in self._halves]))
+        outdeg = np.ones(self.n_pad, np.int32)
+        outdeg[:self.n] = self._outdeg
+        self._dev_outdeg = jnp.asarray(outdeg.reshape(self.nd, self.n_loc))
+
+    def _rebuild(self, reason: str) -> None:
+        caps = self._caps_for(self._indeg)
+        # never shrink: keep stacked shapes stable unless we *must* grow
+        caps = {k: max(v, self._caps[k]) for k, v in caps.items()}
+        self._adopt(self.graph(), caps)
+        self._last_rebuild_reason = reason
+
+    # -- queries -------------------------------------------------------------
+
+    @property
+    def m(self) -> int:
+        return int(self._keys.size)
+
+    @property
+    def sg(self) -> ShardedGraph:
+        return ShardedGraph(
+            ell_idx=self.dev_ell_idx, ell_mask=self.dev_ell_mask,
+            hi_pos=self.dev_hi_pos, hi_tiles=self.dev_hi_tiles,
+            hi_tmask=self.dev_hi_tmask, hi_rowmap=self.dev_hi_rowmap,
+            out_deg=self._dev_outdeg, valid=self._dev_valid, n_true=self.n)
+
+    def graph(self) -> Graph:
+        """Materialize the host CSR Graph (verification / rebuild path)."""
+        return graph_from_sorted_keys(self.n, self._keys)
+
+    def fragmentation(self) -> float:
+        return max(h.tile_waste() for h in self._halves)
+
+    # -- the batch-update lifecycle ------------------------------------------
+
+    def apply(self, delta: Delta) -> SnapshotStats:
+        """Apply a canonical Δ^t in place; returns per-apply stats."""
+        t0 = time.perf_counter()
+        stats = SnapshotStats()
+        self._keys, (d_s, d_d), (i_s, i_d) = apply_net_delta(
+            self._keys, self.n, delta, self._indeg, self._outdeg)
+        stats.net_del, stats.net_ins = int(d_s.size), int(i_s.size)
+
+        reason = rebuild_reason(delta.size, self.m, self.fragmentation(),
+                                self.rebuild_threshold, self.frag_budget)
+        if reason is not None:
+            self._rebuild(reason)
+            stats.rebuilt, stats.rebuild_reason = True, reason
+            stats.host_s = time.perf_counter() - t0
+            return stats
+
+        n_loc = self.n_loc
+        mig0 = sum(h.migrations for h in self._halves)
+        try:
+            # pull orientation: row = destination vertex, entry = source
+            for u, v in zip(d_s.tolist(), d_d.tolist()):
+                self._halves[v // n_loc].delete(v % n_loc, u)
+            for u, v in zip(i_s.tolist(), i_d.tolist()):
+                self._halves[v // n_loc].insert(v % n_loc, u)
+        except CapacityError as e:
+            # mirrors are mid-edit but the key set is complete: rebuild
+            self._rebuild(f"capacity:{e}")
+            stats.rebuilt, stats.rebuild_reason = True, f"capacity:{e}"
+            stats.host_s = time.perf_counter() - t0
+            return stats
+
+        stats.migrations = sum(h.migrations for h in self._halves) - mig0
+        stats.host_s = time.perf_counter() - t0
+        t1 = time.perf_counter()
+        for s, half in enumerate(self._halves):
+            rows, tiles, rowmap_dirty, side_dirty = half.drain_dirty()
+            js = jnp.asarray(s)
+            if rows.size:
+                at = _pad_rows(rows, next_pow2(rows.size))
+                self.dev_ell_idx = _scatter_shard_rows(
+                    self.dev_ell_idx, js, jnp.asarray(at),
+                    jnp.asarray(half.ell_idx[at]))
+                self.dev_ell_mask = _scatter_shard_rows(
+                    self.dev_ell_mask, js, jnp.asarray(at),
+                    jnp.asarray(half.ell_mask[at]))
+            if tiles.size:
+                at = _pad_rows(tiles, next_pow2(tiles.size))
+                self.dev_hi_tiles = _scatter_shard_rows(
+                    self.dev_hi_tiles, js, jnp.asarray(at),
+                    jnp.asarray(half.hi_tiles[at]))
+                self.dev_hi_tmask = _scatter_shard_rows(
+                    self.dev_hi_tmask, js, jnp.asarray(at),
+                    jnp.asarray(half.hi_tmask[at]))
+            # small per-shard 1-D side tables, restaged only when touched
+            if rowmap_dirty:
+                self.dev_hi_rowmap = self.dev_hi_rowmap.at[s].set(
+                    jnp.asarray(half.hi_rowmap.copy()))
+            if side_dirty:
+                self.dev_hi_pos = self.dev_hi_pos.at[s].set(
+                    jnp.asarray(half.hi_ids.copy()))
+            stats.rows_touched += int(rows.size)
+            stats.tiles_touched += int(tiles.size)
+        touched = np.unique(np.concatenate([d_s, i_s]))
+        if touched.size:
+            at = _pad_rows(touched.astype(np.int32),
+                           next_pow2(touched.size))
+            flat = self._dev_outdeg.reshape(-1)
+            flat = _scatter_1d(flat, jnp.asarray(at),
+                               jnp.asarray(self._outdeg[at].astype(np.int32)))
+            self._dev_outdeg = flat.reshape(self.nd, self.n_loc)
+        stats.device_s = time.perf_counter() - t1
+        return stats

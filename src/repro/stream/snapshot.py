@@ -87,6 +87,55 @@ def _pad_rows(rows: np.ndarray, cap: int) -> np.ndarray:
     return out
 
 
+def apply_net_delta(keys: np.ndarray, n: int, delta: Delta,
+                    indeg: np.ndarray, outdeg: np.ndarray):
+    """Net-effect of a canonical Δ against the sorted edge-key set.
+
+    Shared by DeviceSnapshot and ShardedSnapshot (the membership guard and
+    net-vs-raw semantics are subtle enough that one copy must serve both):
+    deletions of absent edges and insertions of present edges are no-ops
+    (one vectorized searchsorted membership pass each); the key set is
+    maintained sorted; `indeg`/`outdeg` are updated IN PLACE.
+
+    Returns (keys', (d_s, d_d), (i_s, i_d)) — the *net* edge arrays.
+    """
+    dk = edge_keys(n, delta.del_src, delta.del_dst)
+    pos = np.searchsorted(keys, dk)
+    found = (pos < keys.size)
+    found[found] = keys[pos[found]] == dk[found]
+    net_del = dk[found]
+    ik = edge_keys(n, delta.ins_src, delta.ins_dst)
+    pos = np.searchsorted(keys, ik)
+    present = (pos < keys.size)
+    present[present] = keys[pos[present]] == ik[present]
+    net_ins = ik[~present]
+    # maintain the sorted key set (O(|E|) memmove, vectorized)
+    if net_del.size:
+        keys = np.delete(keys, np.searchsorted(keys, net_del))
+    if net_ins.size:
+        at = np.searchsorted(keys, net_ins)
+        keys = np.insert(keys, at, net_ins)
+    # degree bookkeeping
+    d_s, d_d = keys_to_edges(n, net_del)
+    i_s, i_d = keys_to_edges(n, net_ins)
+    np.subtract.at(outdeg, d_s, 1)
+    np.subtract.at(indeg, d_d, 1)
+    np.add.at(outdeg, i_s, 1)
+    np.add.at(indeg, i_d, 1)
+    return keys, (d_s, d_d), (i_s, i_d)
+
+
+def rebuild_reason(delta_size: int, m: int, fragmentation: float,
+                   threshold: float, budget: float):
+    """The shared rebuild-over-incremental decision: a batch above the cost
+    crossover or fragmentation over budget. Returns a reason or None."""
+    if delta_size > threshold * max(m, 1):
+        return "batch_too_large"
+    if fragmentation > budget:
+        return "fragmentation"
+    return None
+
+
 class _HalfLayout:
     """Host mirror of one orientation's hybrid layout with in-place edits.
 
@@ -95,8 +144,8 @@ class _HalfLayout:
     the *opposite* orientation's degree and is owned by the snapshot.
     """
 
-    def __init__(self, lay: HybridLayout, row_deg: np.ndarray,
-                 scatter_impl: str = "jnp"):
+    def __init__(self, lay, row_deg: np.ndarray,
+                 scatter_impl: str = "jnp", stage_device: bool = True):
         n = lay.n
         self.n, self.d_p, self.tile = n, lay.d_p, lay.tile
         self.ell_idx = np.ascontiguousarray(lay.ell_idx)
@@ -133,13 +182,36 @@ class _HalfLayout:
         # alias a suitably-aligned numpy buffer, and these mirrors are
         # mutated in place across batches — aliasing would mutate the
         # "immutable" device arrays underneath cached computations.
-        self.dev_ell_idx = jnp.asarray(self.ell_idx.copy())
-        self.dev_ell_mask = jnp.asarray(self.ell_mask.copy())
-        self.dev_hi_tiles = jnp.asarray(self.hi_tiles.copy())
-        self.dev_hi_tmask = jnp.asarray(self.hi_tmask.copy())
-        self.dev_hi_rowmap = jnp.asarray(self.hi_rowmap.copy())
-        self.dev_hi_ids = jnp.asarray(self.hi_ids.copy())
-        self.dev_is_low = jnp.asarray(self.is_low.copy())
+        # `stage_device=False` skips staging entirely: the sharded snapshot
+        # (stream/sharded.py) reuses this host-edit machinery per shard but
+        # owns STACKED device arrays itself, draining `drain_dirty()` into
+        # per-shard scatters instead of calling `device_refresh`.
+        if stage_device:
+            self.dev_ell_idx = jnp.asarray(self.ell_idx.copy())
+            self.dev_ell_mask = jnp.asarray(self.ell_mask.copy())
+            self.dev_hi_tiles = jnp.asarray(self.hi_tiles.copy())
+            self.dev_hi_tmask = jnp.asarray(self.hi_tmask.copy())
+            self.dev_hi_rowmap = jnp.asarray(self.hi_rowmap.copy())
+            self.dev_hi_ids = jnp.asarray(self.hi_ids.copy())
+            self.dev_is_low = jnp.asarray(self.is_low.copy())
+
+    # -- dirty-state handoff (sharded snapshot path) -------------------------
+
+    def drain_dirty(self):
+        """Return and clear (rows, tiles, rowmap_dirty, side_dirty).
+
+        For owners that stage the device arrays themselves (stacked sharded
+        layouts): the host mirrors are current, the returned ids say exactly
+        which rows/tiles must be re-scattered.
+        """
+        nr, nt = len(self._dirty_rows), len(self._dirty_tiles)
+        rows = np.fromiter(self._dirty_rows, np.int32, nr)
+        tiles = np.fromiter(self._dirty_tiles, np.int32, nt)
+        rowmap_dirty, side_dirty = self._rowmap_dirty, self._side_dirty
+        self._dirty_rows.clear()
+        self._dirty_tiles.clear()
+        self._rowmap_dirty = self._side_dirty = False
+        return rows, tiles, rowmap_dirty, side_dirty
 
     # -- structural edits (host mirrors) ------------------------------------
 
@@ -429,39 +501,13 @@ class DeviceSnapshot:
         """Apply a canonical Δ^t in place; returns per-apply stats."""
         t0 = time.perf_counter()
         stats = SnapshotStats()
-        n = self.n
-        # net effect against the current edge set (sorted-key membership)
-        dk = edge_keys(n, delta.del_src, delta.del_dst)
-        pos = np.searchsorted(self._keys, dk)
-        found = (pos < self._keys.size)
-        found[found] = self._keys[pos[found]] == dk[found]
-        net_del = dk[found]
-        ik = edge_keys(n, delta.ins_src, delta.ins_dst)
-        pos = np.searchsorted(self._keys, ik)
-        present = (pos < self._keys.size)
-        present[present] = self._keys[pos[present]] == ik[present]
-        net_ins = ik[~present]
-        stats.net_del, stats.net_ins = int(net_del.size), int(net_ins.size)
-        # maintain the sorted key set (O(|E|) memmove, vectorized)
-        if net_del.size:
-            at = np.searchsorted(self._keys, net_del)
-            self._keys = np.delete(self._keys, at)
-        if net_ins.size:
-            at = np.searchsorted(self._keys, net_ins)
-            self._keys = np.insert(self._keys, at, net_ins)
-        # degree bookkeeping
-        d_s, d_d = keys_to_edges(n, net_del)
-        i_s, i_d = keys_to_edges(n, net_ins)
-        np.subtract.at(self._outdeg, d_s, 1)
-        np.subtract.at(self._indeg, d_d, 1)
-        np.add.at(self._outdeg, i_s, 1)
-        np.add.at(self._indeg, i_d, 1)
+        self._keys, (d_s, d_d), (i_s, i_d) = apply_net_delta(
+            self._keys, self.n, delta, self._indeg, self._outdeg)
+        stats.net_del, stats.net_ins = int(d_s.size), int(i_s.size)
 
-        if (delta.size > self.rebuild_threshold * max(self.m, 1)
-                or self.fragmentation() > self.frag_budget):
-            reason = ("batch_too_large"
-                      if delta.size > self.rebuild_threshold * max(self.m, 1)
-                      else "fragmentation")
+        reason = rebuild_reason(delta.size, self.m, self.fragmentation(),
+                                self.rebuild_threshold, self.frag_budget)
+        if reason is not None:
             self._rebuild(reason)
             stats.rebuilt, stats.rebuild_reason = True, reason
             stats.host_s = time.perf_counter() - t0

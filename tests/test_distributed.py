@@ -49,6 +49,15 @@ SCRIPT = textwrap.dedent("""
     mesh3 = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
     r3, _ = distributed_static_pagerank(mesh3, sg, r0)
     np.testing.assert_allclose(np.asarray(r3), np.asarray(r), atol=1e-15)
+
+    # delta_every=k only changes WHEN the global L-inf check runs, never the
+    # fixpoint: k=4 must land on the same ranks as k=1 (within the surplus
+    # iterations' contraction, far below the convergence tolerance)
+    r_k4, it_k4 = distributed_static_pagerank(mesh, sg, r0, delta_every=4)
+    err_k = l1_error(np.asarray(r_k4).reshape(-1)[:g.n],
+                     np.asarray(r).reshape(-1)[:g.n])
+    assert err_k < 1e-9, err_k
+    assert int(it_k4) % 4 == 0, int(it_k4)
     print("OK")
 """)
 

@@ -1,0 +1,114 @@
+"""Single-device vs 1-D sharded vs 2-D sharded rank parity (4 host devices).
+
+All three engines bind the same `core.rank_step` math to different pull /
+collective plumbing, so on the same graph — and, for DF-P, from the same
+`initial_affected` flags — their fixpoints must agree to fp-accumulation
+noise, not just to the oracle tolerance. Subprocess: XLA fixes the device
+count at first init and the rest of the suite must see 1 device.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SCRIPT = textwrap.dedent("""
+    import jax
+    jax.config.update("jax_enable_x64", True)
+    import numpy as np, jax.numpy as jnp
+    from repro.core import (powerlaw_graph, random_batch, apply_batch,
+                            device_graph, init_ranks, static_pagerank,
+                            dfp_pagerank, batch_to_device, initial_affected,
+                            expand_affected, reference_pagerank, l1_error,
+                            PRParams)
+    from repro.core.distributed import (build_sharded,
+                                        distributed_static_pagerank,
+                                        distributed_dfp_pagerank,
+                                        initial_affected_sharded,
+                                        shard_vector, unshard_vector)
+    from repro.core.distributed2d import build_sharded_2d, pagerank_2d, dfp_2d
+    from repro.core.dynamic import DeviceBatch
+
+    assert len(jax.devices()) == 4, jax.devices()
+    mesh = jax.make_mesh((2, 2), ("data", "model"))
+    g = powerlaw_graph(600, 6000, seed=11)
+    n = g.n
+    params = PRParams(tau_f=1e-9, tau_p=1e-9)
+
+    # --- static parity ----------------------------------------------------
+    dg = device_graph(g, d_p=8, tile=64)
+    r_sd, _ = static_pagerank(dg, init_ranks(n), params)
+    r_sd = np.asarray(r_sd)
+
+    sg1 = build_sharded(g, 4, d_p=8, tile=64)
+    r0 = jnp.full((4, sg1.n_loc), 1.0 / n, jnp.float64)
+    r_1d, _ = distributed_static_pagerank(mesh, sg1, r0, params)
+    r_1d = unshard_vector(r_1d, n)
+
+    sg2 = build_sharded_2d(g, 2, 2, d_p=8)
+    rc, blk = sg2.out_deg.shape
+    r_2d, _ = pagerank_2d(mesh, sg2,
+                          jnp.full((rc, blk), 1.0 / n, jnp.float64), params)
+    r_2d = np.asarray(r_2d).reshape(-1)[:n]
+
+    ref = reference_pagerank(g)
+    for name, r in (("single", r_sd), ("1d", r_1d), ("2d", r_2d)):
+        err = l1_error(r, ref)
+        assert err < 1e-8, (name, err)
+    assert l1_error(r_1d, r_sd) < 1e-9, l1_error(r_1d, r_sd)
+    assert l1_error(r_2d, r_sd) < 1e-9, l1_error(r_2d, r_sd)
+
+    # --- DF-P parity from the SAME initial_affected flags -----------------
+    b = random_batch(g, 0.01, seed=12)
+    g2 = apply_batch(g, b)
+    db = batch_to_device(b, n)
+    dv0, dn0 = initial_affected(n, db.del_src, db.del_dst, db.ins_src)
+
+    dg2 = device_graph(g2, d_p=8, tile=64)
+    r_dfp_sd, _ = dfp_pagerank(dg2, jnp.asarray(r_sd), db, params)
+    r_dfp_sd = np.asarray(r_dfp_sd)
+
+    sg1b = build_sharded(g2, 4, d_p=8, tile=64)
+    # stacked flags from the same dense flag vectors (engine expands at i=0)
+    dv_s = shard_vector(np.asarray(dv0), 4, fill=False)
+    dn_s = shard_vector(np.asarray(dn0), 4, fill=False)
+    r_dfp_1d, _ = distributed_dfp_pagerank(
+        mesh, sg1b, jnp.asarray(shard_vector(r_sd, 4, fill=1.0 / n)),
+        dv_s, dn_s, params)
+    r_dfp_1d = unshard_vector(r_dfp_1d, n)
+
+    sg2b = build_sharded_2d(g2, 2, 2, d_p=8)
+    rc, blk = sg2b.out_deg.shape
+    pad2 = rc * blk - n
+    r_prev2 = jnp.asarray(np.concatenate(
+        [r_sd, np.full(pad2, 1.0 / n)]).reshape(rc, blk))
+    dv2 = jnp.asarray(np.concatenate(
+        [np.asarray(dv0), np.zeros(pad2, bool)]).reshape(rc, blk))
+    dn2 = jnp.asarray(np.concatenate(
+        [np.asarray(dn0), np.zeros(pad2, bool)]).reshape(rc, blk))
+    r_dfp_2d, _ = dfp_2d(mesh, sg2b, r_prev2, dv2, dn2, params)
+    r_dfp_2d = np.asarray(r_dfp_2d).reshape(-1)[:n]
+
+    ref2 = reference_pagerank(g2)
+    for name, r in (("single", r_dfp_sd), ("1d", r_dfp_1d),
+                    ("2d", r_dfp_2d)):
+        err = l1_error(r, ref2)
+        assert err < 1e-7, (name, err)
+    assert l1_error(r_dfp_1d, r_dfp_sd) < 1e-8, l1_error(r_dfp_1d, r_dfp_sd)
+    assert l1_error(r_dfp_2d, r_dfp_sd) < 1e-8, l1_error(r_dfp_2d, r_dfp_sd)
+    print("OK")
+""")
+
+
+@pytest.mark.slow
+def test_engine_parity_4dev():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = "src"
+    out = subprocess.run(
+        [sys.executable, "-c", SCRIPT], env=env,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "OK" in out.stdout

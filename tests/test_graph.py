@@ -106,3 +106,32 @@ def test_temporal_stream_protocol():
     assert len(batches) == 10
     assert all(b.del_src.size == 0 for b in batches)  # insertion-only stream
     assert base.m >= 100  # self-loops at minimum
+
+
+def test_build_hybrid_rows_matches_build_hybrid():
+    from repro.core import build_hybrid_rows
+    g = powerlaw_graph(300, 3000, seed=5)
+    lay = build_hybrid(g, d_p=8, tile=32)
+    hr = build_hybrid_rows(g.t_offsets, g.t_sources, d_p=8, tile=32)
+    for f in ("ell_idx", "ell_mask", "hi_ids", "hi_tiles", "hi_tmask",
+              "hi_rowmap", "is_low"):
+        assert np.array_equal(getattr(lay, f), getattr(hr, f)), f
+    assert np.array_equal(hr.row_deg, g.in_degree())
+    # padded empty rows: same fill, extra all-padding rows at the tail
+    hr2 = build_hybrid_rows(g.t_offsets, g.t_sources, d_p=8, tile=32,
+                            n_rows=g.n + 7)
+    assert hr2.ell_idx.shape == (g.n + 7, 8)
+    assert np.array_equal(hr2.ell_idx[:g.n], hr.ell_idx)
+    assert not hr2.ell_mask[g.n:].any() and hr2.is_low[g.n:].all()
+
+
+def test_build_sharded_trailing_empty_shard():
+    # nd=8, n=10 -> n_loc=2 and shards 5..7 are fully past the real vertex
+    # range; the clamped shard_bounds must keep them as pure padding
+    from repro.core.distributed import build_sharded, shard_bounds
+    g = powerlaw_graph(10, 40, seed=0)
+    sg = build_sharded(g, 8, d_p=4, tile=16)
+    assert sg.n_loc * sg.nd >= g.n
+    assert shard_bounds(6, sg.n_loc, g.n) == (10, 10)
+    valid = np.asarray(sg.valid)
+    assert valid.sum() == g.n and not valid[5:].any()
