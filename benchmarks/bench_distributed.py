@@ -130,11 +130,19 @@ def run():
         os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
     out = subprocess.run([sys.executable, "-c", SCRIPT], env=env, cwd=root,
                          capture_output=True, text=True, timeout=1800)
+    from .common import emit
     if out.returncode != 0:
-        print("distributed/FAILED,0.0,see-stderr")
+        emit("distributed/FAILED", 0.0, "see-stderr")
         sys.stderr.write(out.stderr[-2000:])
         return
-    sys.stdout.write(out.stdout)
+    # re-emit the subprocess CSV through the shared sink so the rows land
+    # in the structured report too (the subprocess has its own interpreter;
+    # its RECORDS/registry are unreachable from here)
+    for line in out.stdout.splitlines():
+        if not line.strip():
+            continue
+        name, us, derived = line.split(",", 2)
+        emit(name, float(us), derived)
 
 
 if __name__ == "__main__":

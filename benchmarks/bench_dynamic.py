@@ -18,7 +18,8 @@ from repro.core import (apply_batch, batch_to_device, device_graph,
                         forward_device_graph, init_ranks, l1_error,
                         nd_pagerank, reference_pagerank, static_pagerank,
                         temporal_stream)
-from .common import emit, geomean, timeit
+from repro.obs.trace import trace_summary
+from .common import emit, geomean, smoke, timeit
 
 N = 20_000
 EDGES = 300_000
@@ -27,21 +28,25 @@ PER_FRAC = 4
 
 
 def run(n=N, edges=EDGES):
+    fracs, per_frac = FRACS, PER_FRAC
+    if smoke():
+        n, edges, fracs, per_frac = 4_000, 40_000, (1e-3,), 2
     # Paper §5.1.4: warm 90% of the temporal stream, then apply batches of
     # B = frac*|E_T| consecutive stream edges for each batch size.
     base, batches = temporal_stream(n, edges, n_batches=1000, seed=7)
     stream_src = np.concatenate([b.ins_src for b in batches])
     stream_dst = np.concatenate([b.ins_dst for b in batches])
     caps = dict(d_p=64, tile=256)
-    for frac in FRACS:
+    for frac in fracs:
         B = max(1, int(frac * edges))
         g = base
         dg = device_graph(g, **caps)
         r_prev, _ = static_pagerank(dg, init_ranks(g.n))
         times = {k: [] for k in ("static", "nd", "dt", "df", "dfp")}
         errs = {k: [] for k in times}
+        dfp_trace = None
         off = 0
-        for _ in range(PER_FRAC):
+        for _ in range(per_frac):
             from repro.core import BatchUpdate
             b = BatchUpdate(del_src=np.zeros(0, np.int32),
                             del_dst=np.zeros(0, np.int32),
@@ -63,17 +68,23 @@ def run(n=N, edges=EDGES):
             }
             out = {}
             for k, fn in runs.items():
-                t, (r, iters) = timeit(fn, warmup=1, iters=1)
-                times[k].append(t)
+                tm, (r, iters) = timeit(fn, warmup=1, iters=1)
+                times[k].append(tm.min_s)
                 errs[k].append(l1_error(np.asarray(r), ref))
                 out[k] = r
+            # untimed traced solve: the per-iteration linf/frontier series
+            # for the structured sink (last measured batch wins)
+            _, it_t, tb = dfp_pagerank_compact(dg, fwd, r_prev, db,
+                                               trace=True)
+            dfp_trace = trace_summary(tb, it_t)
             r_prev = out["dfp"]   # track like a production deployment
         t_static = geomean(times["static"])
         for k in times:
             t = geomean(times[k])
             emit(f"dynamic-temporal/frac={frac:g}/{k}", t * 1e6,
                  f"speedup_vs_static={t_static / t:.2f};"
-                 f"l1err={geomean(errs[k]):.3e}")
+                 f"l1err={geomean(errs[k]):.3e}",
+                 trace=dfp_trace if k == "dfp" else None)
 
 
 if __name__ == "__main__":

@@ -28,7 +28,7 @@ from repro.core import (apply_batch, build_hybrid, device_graph,
                         l1_error, static_pagerank, temporal_stream, to_device)
 from repro.stream import StreamSession, ingest
 from repro.stream.session import choose_engine
-from .common import emit, geomean
+from .common import emit, geomean, smoke
 
 N = 20_000
 EDGES = 300_000
@@ -39,15 +39,18 @@ CAPS = dict(d_p=64, tile=256)
 
 
 def run(n=N, edges=EDGES):
+    fracs, warm, meas = FRACS, WARM, MEAS
+    if smoke():
+        n, edges, fracs, warm, meas = 4_000, 40_000, (1e-3,), 1, 2
     base, batches = temporal_stream(n, edges, n_batches=1000, seed=7)
     stream_src = np.concatenate([b.ins_src for b in batches])
     stream_dst = np.concatenate([b.ins_dst for b in batches])
     from repro.core import BatchUpdate
-    for frac in FRACS:
+    for frac in fracs:
         B = max(1, int(frac * edges))
         bs = []
         off = 0
-        for _ in range(WARM + MEAS):
+        for _ in range(warm + meas):
             bs.append(BatchUpdate(del_src=np.zeros(0, np.int32),
                                   del_dst=np.zeros(0, np.int32),
                                   ins_src=stream_src[off:off + B],
@@ -100,7 +103,7 @@ def run(n=N, edges=EDGES):
             r_prev = jax.block_until_ready(r)
             t5 = time.perf_counter()
             g = g2
-            if i < WARM:
+            if i < warm:
                 continue
             inc_maintain.append(t1 - t0)
             inc_total.append(t2 - t0)

@@ -1,4 +1,4 @@
-"""Shared benchmark utilities: timing, graph generation, CSV output.
+"""Shared benchmark utilities: timing, CSV + structured record collection.
 
 All PageRank benchmarks run the REAL jitted engine on this host (CPU device;
 the Pallas kernels are validated separately in interpret mode — interpret
@@ -6,34 +6,110 @@ timing is meaningless). Numbers here are therefore CPU-relative: the paper's
 *relationships* (DF-P vs Static vs ND vs DT speedups, error ordering) are the
 reproduction target; absolute A100 numbers are not reproducible without the
 hardware (EXPERIMENTS.md §Benchmarks).
+
+Two sinks, one call: ``emit`` prints the historical ``name,us_per_call,derived``
+CSV row *and* appends a structured record to the module-level ``RECORDS``
+list, which ``benchmarks.run`` drains into a ``repro.obs.report.RunReport``
+(BENCH_obs.json) after the selected benches finish. Benches that have a full
+``Timing`` or an iteration-trace summary attach them via the keyword args;
+CSV output is unchanged either way.
+
+``--smoke`` mode (set by ``benchmarks.run``) shrinks every bench to
+CI-viable sizes via the ``smoke()`` predicate — same code paths, same
+record schema, tiny graphs.
 """
 from __future__ import annotations
 
 import time
+from typing import List, NamedTuple, Optional
 
 import jax
 import numpy as np
 
-__all__ = ["timeit", "geomean", "emit"]
+__all__ = ["Timing", "timeit", "geomean", "emit", "RECORDS",
+           "reset_records", "set_smoke", "smoke"]
+
+
+class Timing(NamedTuple):
+    """One benchmark measurement: seconds over ``reps`` timed calls.
+
+    ``min_s`` is the headline (noise-robust on a shared host: the minimum is
+    the run least disturbed by the scheduler); mean/std are kept so the
+    structured sink can show spread, not to replace the min.
+    """
+    min_s: float
+    mean_s: float
+    std_s: float
+    reps: int
 
 
 def timeit(fn, *args, warmup=1, iters=3, **kw):
+    """Time ``fn(*args, **kw)`` -> (Timing, last_output).
+
+    Blocks on the output every call so async dispatch can't leak work out of
+    the timed region; ``warmup`` unmeasured calls absorb jit compilation.
+    """
+    out = None
     for _ in range(warmup):
         out = fn(*args, **kw)
         jax.block_until_ready(out)
     ts = []
-    for _ in range(iters):
+    for _ in range(max(1, iters)):
         t0 = time.perf_counter()
         out = fn(*args, **kw)
         jax.block_until_ready(out)
         ts.append(time.perf_counter() - t0)
-    return min(ts), out
+    arr = np.asarray(ts)
+    return Timing(min_s=float(arr.min()), mean_s=float(arr.mean()),
+                  std_s=float(arr.std()), reps=len(ts)), out
 
 
-def geomean(xs):
-    xs = np.asarray([max(x, 1e-12) for x in xs])
+def geomean(xs) -> float:
+    """Geometric mean; empty input -> 0.0 (a bench that measured nothing
+    must not crash the whole suite with a numpy warning-turned-nan)."""
+    xs = [max(float(x), 1e-12) for x in xs]
+    if not xs:
+        return 0.0
     return float(np.exp(np.mean(np.log(xs))))
 
 
-def emit(name: str, us_per_call: float, derived: str = ""):
+#: structured records accumulated by ``emit`` for the current process;
+#: drained by ``benchmarks.run`` into the BENCH_obs.json RunReport.
+RECORDS: List[dict] = []
+
+_SMOKE = False
+
+
+def set_smoke(on: bool) -> None:
+    global _SMOKE
+    _SMOKE = bool(on)
+
+
+def smoke() -> bool:
+    """True when benches should shrink to CI smoke sizes."""
+    return _SMOKE
+
+
+def reset_records() -> None:
+    RECORDS.clear()
+
+
+def emit(name: str, us_per_call: float, derived: str = "", *,
+         timing: Optional[Timing] = None,
+         trace: Optional[dict] = None) -> None:
+    """Print the CSV row and record the structured equivalent.
+
+    ``timing`` (when the bench used :func:`timeit`) contributes mean/std to
+    the JSON record; without it the record carries the headline only.
+    ``trace`` is a ``repro.obs.trace.trace_summary`` dict — the
+    per-iteration linf/frontier series for this bench's solve.
+    """
     print(f"{name},{us_per_call:.1f},{derived}")
+    rec = {"name": name, "us_min": float(us_per_call), "derived": derived}
+    if timing is not None:
+        rec["us_mean"] = timing.mean_s * 1e6
+        rec["us_std"] = timing.std_s * 1e6
+        rec["reps"] = timing.reps
+    if trace is not None:
+        rec["trace"] = trace
+    RECORDS.append(rec)

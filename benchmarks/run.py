@@ -9,25 +9,75 @@
   (beyond paper)    -> bench_distributed (single vs 1-D vs 2-D sharded,
                        static + streamed DF-P; forced host mesh, subprocess)
 
-Prints ``name,us_per_call,derived`` CSV rows.
+Prints ``name,us_per_call,derived`` CSV rows (unchanged format) and writes
+the structured twin — a ``repro.obs/bench-v1`` RunReport with per-record
+min/mean/std, parsed derived metrics, iteration-trace summaries, and the
+session's span/counter registry — to ``--out`` (default BENCH_obs.json).
+Gate a change against a previous run with ``python -m repro.obs.check``.
+
+Usage:
+  python -m benchmarks.run [keys ...] [--smoke] [--out PATH] [--jsonl PATH]
+
+``--smoke`` shrinks every bench to CI-viable sizes (same code paths, same
+record schema); no keys = run everything.
 """
+import argparse
 import sys
 
 
-def main() -> None:
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m benchmarks.run", description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("keys", nargs="*",
+                    help="bench keys to run (default: all)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI sizes; same code paths and schema")
+    ap.add_argument("--out", default="BENCH_obs.json",
+                    help="structured report path ('' disables)")
+    ap.add_argument("--jsonl", default="",
+                    help="also write the JSONL form here")
+    ap.add_argument("--name", default="bench",
+                    help="report name recorded in the JSON header")
+    args = ap.parse_args(argv)
+
+    from . import common
+    common.set_smoke(args.smoke)
+    common.reset_records()
+
     from . import (bench_static, bench_dynamic, bench_sweep, bench_partition,
                    bench_fusion, bench_stream, bench_distributed)
-    print("name,us_per_call,derived")
-    only = sys.argv[1] if len(sys.argv) > 1 else None
     mods = {"static": bench_static, "dynamic": bench_dynamic,
             "sweep": bench_sweep, "partition": bench_partition,
             "fusion": bench_fusion, "stream": bench_stream,
             "distributed": bench_distributed}
-    for key, mod in mods.items():
-        if only and key != only:
-            continue
-        mod.run()
+    unknown = [k for k in args.keys if k not in mods]
+    if unknown:
+        ap.error(f"unknown bench keys {unknown}; choose from {list(mods)}")
+    keys = args.keys or list(mods)
+
+    print("name,us_per_call,derived")
+    for key in keys:
+        mods[key].run()
+
+    if args.out or args.jsonl:
+        from repro.obs.report import RunReport, parse_derived
+        report = RunReport(name=args.name)
+        for rec in common.RECORDS:
+            report.add(rec["name"], us_min=rec["us_min"],
+                       us_mean=rec.get("us_mean"),
+                       us_std=rec.get("us_std"),
+                       derived=parse_derived(rec.get("derived", "")),
+                       trace=rec.get("trace"))
+        report.attach_registry()
+        if args.out:
+            report.write_json(args.out)
+            print(f"# wrote {args.out} ({len(report.benchmarks)} records)",
+                  file=sys.stderr)
+        if args.jsonl:
+            report.write_jsonl(args.jsonl)
+    return 0
 
 
 if __name__ == '__main__':
-    main()
+    sys.exit(main())

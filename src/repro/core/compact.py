@@ -33,6 +33,7 @@ from .frontier import expand_affected, initial_affected
 from .graph import Graph, build_hybrid, next_pow2 as _next_pow2
 from .pagerank import DeviceGraph, PRParams, as_device_graph, to_device
 from .rank_step import rank_value, relative_change, teleport
+from ..obs.trace import trace_init, trace_record
 
 __all__ = ["forward_device_graph", "dfp_pagerank_compact",
            "df_pagerank_compact"]
@@ -106,17 +107,20 @@ def _tiles_for(dg: DeviceGraph, dv: jnp.ndarray, kt: int):
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("params", "k", "kt", "kn", "prune"))
+                   static_argnames=("params", "k", "kt", "kn", "prune",
+                                    "trace"))
 def _compact_loop(dg: DeviceGraph, fwd: DeviceGraph, r0, dv0, dn0,
-                  params: PRParams, k: int, kt: int, kn: int, prune: bool):
+                  params: PRParams, k: int, kt: int, kn: int, prune: bool,
+                  trace: bool = False):
     n = dg.n
     dt = r0.dtype
     d = dg.out_deg.astype(dt)
     c0 = teleport(params.alpha, n, dt)
 
     def body(state):
-        r, dv, dn, _, i = state
+        r, dv, dn, _, i, tb = state
         dv = jnp.where(i > 0, dv | _scatter_expand(fwd, dn, kn), dv)
+        dv_in = dv   # post-expansion frontier entering this sweep (trace)
         tsel, n_tiles = _tiles_for(dg, dv, kt)
         overflow = (jnp.sum(dv) > k) | (jnp.sum(dn) > kn) | (n_tiles > kt)
         idx = _compact(dv, k, n)
@@ -145,25 +149,37 @@ def _compact_loop(dg: DeviceGraph, fwd: DeviceGraph, r0, dv0, dn0,
         dv = jnp.where(overflow, state[1], dv)
         dn_new = jnp.where(overflow, dn, dn_new)
         delta = jnp.where(overflow, jnp.asarray(jnp.inf, dt), jnp.max(dr))
-        return r_new, dv, dn_new, delta, i + 1
+        if trace:
+            # the overflow iteration records linf=inf — the visible marker
+            # of the dense handoff
+            frontier = jnp.sum(dv_in)
+            tb = trace_record(
+                tb, i, linf=delta, frontier=frontier,
+                delta_n=jnp.sum(dn_new),
+                pruned=frontier - jnp.sum(dv) if prune else 0)
+        return r_new, dv, dn_new, delta, i + 1, tb
 
     def cond(state):
-        r, dv, dn, delta, i = state
+        r, dv, dn, delta, i, _ = state
         within = (jnp.sum(dv) <= k) & (jnp.sum(dn) <= kn)
         return (delta > params.tau) & (i < params.max_iter) & within \
             & ~jnp.isinf(delta)
     # NOTE: body sets delta=inf on any capacity overflow (incl. tile list),
     # so an exit through `within` always routes to the dense fallback.
 
+    tb0 = trace_init(params.max_iter, dt,
+                     "dfp_compact" if prune else "df_compact") if trace \
+        else jnp.asarray(0, jnp.int32)
     # finite sentinel: inf is reserved for the capacity-overflow signal
     init = (r0, dv0, dn0, jnp.asarray(jnp.finfo(dt).max, dt),
-            jnp.asarray(0, jnp.int32))
-    r, dv, dn, delta, iters = jax.lax.while_loop(cond, body, init)
-    return r, dv, dn, delta, iters
+            jnp.asarray(0, jnp.int32), tb0)
+    r, dv, dn, delta, iters, tb = jax.lax.while_loop(cond, body, init)
+    return r, dv, dn, delta, iters, (tb if trace else None)
 
 
 def _df_like_compact(dg, fwd, r_prev, batch: DeviceBatch,
-                     params: PRParams, *, prune: bool, headroom: int = 16):
+                     params: PRParams, *, prune: bool, headroom: int = 16,
+                     trace: bool = False):
     n = dg.n
     dv, dn = initial_affected(n, batch.del_src, batch.del_dst, batch.ins_src)
     # initial marking via the compacted out-edge walk (paper Alg. 5), not a
@@ -180,20 +196,24 @@ def _df_like_compact(dg, fwd, r_prev, batch: DeviceBatch,
     # refuting the tile-compaction hypothesis — DESIGN.md §4).
     kt = dg.hi_tiles.shape[0]
     dn0 = jnp.zeros((n,), jnp.bool_)
-    r, dv, dn, delta, iters = _compact_loop(dg, fwd, r_prev, dv, dn0, params,
-                                            k, kt, kn, prune)
+    r, dv, dn, delta, iters, tb = _compact_loop(dg, fwd, r_prev, dv, dn0,
+                                                params, k, kt, kn, prune,
+                                                trace)
     if float(delta) > params.tau and int(iters) < params.max_iter:
-        # frontier outgrew the capacity: dense engine finishes the job
+        # frontier outgrew the capacity: dense engine finishes the job,
+        # appending to the same trace buffer at offset `iters`
         rest = params._replace(max_iter=params.max_iter - int(iters))
-        r, it2 = _dense_finish(dg, r, dv, dn, rest, prune)
+        out = _dense_finish(dg, r, dv, dn, rest, prune, tb,
+                            jnp.asarray(int(iters), jnp.int32))
+        r, it2, tb = out if trace else (*out, None)
         iters = iters + it2
-    return r, iters
+    return (r, iters, tb) if trace else (r, iters)
 
 
 @functools.partial(jax.jit, static_argnames=("params", "prune"))
-def _dense_finish(dg, r, dv, dn, params, prune):
+def _dense_finish(dg, r, dv, dn, params, prune, tb=None, i_off=0):
     return _loop(dg, r, dv, dn, params, expand=True, prune=prune,
-                 closed_form=prune)
+                 closed_form=prune, tb=tb, i_off=i_off)
 
 
 def _stage_pair(dg, fwd):
@@ -210,13 +230,17 @@ def _stage_pair(dg, fwd):
 
 def dfp_pagerank_compact(dg, fwd=None, r_prev=None,
                          batch: DeviceBatch = None,
-                         params: PRParams = PRParams()):
+                         params: PRParams = PRParams(),
+                         trace: bool = False):
     dg, fwd = _stage_pair(dg, fwd)
-    return _df_like_compact(dg, fwd, r_prev, batch, params, prune=True)
+    return _df_like_compact(dg, fwd, r_prev, batch, params, prune=True,
+                            trace=trace)
 
 
 def df_pagerank_compact(dg, fwd=None, r_prev=None,
                         batch: DeviceBatch = None,
-                        params: PRParams = PRParams()):
+                        params: PRParams = PRParams(),
+                        trace: bool = False):
     dg, fwd = _stage_pair(dg, fwd)
-    return _df_like_compact(dg, fwd, r_prev, batch, params, prune=False)
+    return _df_like_compact(dg, fwd, r_prev, batch, params, prune=False,
+                            trace=trace)

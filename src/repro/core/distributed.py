@@ -37,6 +37,7 @@ from .frontier import initial_affected
 from .graph import Graph, build_hybrid_rows, next_pow2
 from .pagerank import PRParams
 from .rank_step import rank_step
+from ..obs.trace import trace_init, trace_record
 
 try:  # JAX >= 0.4.35 spelling
     from jax import shard_map as _shard_map
@@ -263,7 +264,8 @@ def _squeeze_shard(sgd: dict) -> dict:
 
 
 def _make_loop(axis, params: PRParams, n_true: int, *, dfp: bool,
-               compact_frontier: bool = False, delta_every: int = 1):
+               compact_frontier: bool = False, delta_every: int = 1,
+               trace: bool = False):
     """Build the per-shard while-loop body. `axis` is the (tuple of) mesh
     axis name(s) the vertex dimension is sharded over.
 
@@ -281,7 +283,14 @@ def _make_loop(axis, params: PRParams, n_true: int, *, dfp: bool,
     upcasts locally). `delta_every=k` evaluates the global L-inf all-reduce
     every k iterations only — the straggler/latency mitigation of DESIGN.md
     §8: up to k-1 surplus (cheap, local) iterations traded for k-fold fewer
-    global syncs."""
+    global syncs.
+
+    `trace` carries an obs.trace.TraceBuffer through the loop; its channels
+    come out of psum/pmax collectives so the buffer is replicated across
+    shards (out_spec P()). Tracing adds two small per-iteration collectives
+    and never feeds back into the rank math; with delta_every>1 the traced
+    L∞ is exact every iteration even though the loop predicate still only
+    sees it every k-th."""
 
     def loop(sgd: dict, r0, dv0, dn0):
         sgl = _squeeze_shard(sgd)
@@ -291,7 +300,7 @@ def _make_loop(axis, params: PRParams, n_true: int, *, dfp: bool,
         valid = sgl["valid"]
 
         def body(state):
-            r, dv, dn, _, i = state
+            r, dv, dn, _, i, tb = state
             if dfp:
                 gdt = jnp.uint8 if compact_frontier else dt
                 dn_full = jax.lax.all_gather(dn.astype(gdt), axis, tiled=True)
@@ -299,28 +308,40 @@ def _make_loop(axis, params: PRParams, n_true: int, *, dfp: bool,
                 dv = (dv | grow) & valid
             c_full = jax.lax.all_gather(r / d, axis, tiled=True)
             s = _local_pull(sgl, c_full)
+            dv_in = dv & valid
             r_new, dv, dn_new, local = rank_step(
-                s, r, dv & valid, sgl["out_deg"], alpha=params.alpha,
+                s, r, dv_in, sgl["out_deg"], alpha=params.alpha,
                 n_norm=n_true, tau_f=params.tau_f, tau_p=params.tau_p,
                 prune=dfp, closed_form=dfp, track_frontier=dfp)
             if not dfp:
                 dn_new = dn
+            gmax = jax.lax.pmax(local, axis)
             if delta_every > 1:
                 check = (i + 1) % delta_every == 0
-                delta = jnp.where(check, jax.lax.pmax(local, axis),
-                                  jnp.asarray(jnp.inf, dt))
+                delta = jnp.where(check, gmax, jnp.asarray(jnp.inf, dt))
             else:
-                delta = jax.lax.pmax(local, axis)
-            return r_new, dv, dn_new, delta, i + 1
+                delta = gmax
+            if trace:
+                counts = jnp.stack([
+                    jnp.sum(dv_in), jnp.sum(dn_new),
+                    jnp.sum(dv_in) - jnp.sum(dv & valid)]).astype(jnp.int32)
+                counts = jax.lax.psum(counts, axis)
+                tb = trace_record(tb, i, linf=gmax, frontier=counts[0],
+                                  delta_n=counts[1] if dfp else 0,
+                                  pruned=counts[2] if dfp else 0)
+            return r_new, dv, dn_new, delta, i + 1, tb
 
         def cond(state):
-            *_, delta, i = state
+            _, _, _, delta, i, _ = state
             return (delta > params.tau) & (i < params.max_iter)
 
+        tb0 = trace_init(params.max_iter, dt,
+                         "dfp_1d" if dfp else "static_1d") if trace \
+            else jnp.asarray(0, jnp.int32)
         init = (r0, dv0, dn0, jnp.asarray(jnp.inf, dt),
-                jnp.asarray(0, jnp.int32))
-        r, dv, dn, _, iters = jax.lax.while_loop(cond, body, init)
-        return r[None], iters
+                jnp.asarray(0, jnp.int32), tb0)
+        r, dv, dn, _, iters, tb = jax.lax.while_loop(cond, body, init)
+        return (r[None], iters, tb) if trace else (r[None], iters)
 
     return loop
 
@@ -339,32 +360,36 @@ def pagerank_step_specs(mesh: Mesh):
 
 def distributed_static_pagerank(mesh: Mesh, sg: ShardedGraph, r0: jnp.ndarray,
                                 params: PRParams = PRParams(),
-                                delta_every: int = 1):
-    """r0: [nd, n_loc] stacked ranks. Returns (ranks [nd, n_loc], iters)."""
+                                delta_every: int = 1, trace: bool = False):
+    """r0: [nd, n_loc] stacked ranks. Returns (ranks [nd, n_loc], iters),
+    plus a replicated obs.trace.TraceBuffer when ``trace=True``."""
     axis, shard = _specs(mesh)
     nd, n_loc = sg.out_deg.shape
     on = jnp.ones((nd, n_loc), jnp.bool_)
     off = jnp.zeros((nd, n_loc), jnp.bool_)
     loop = _make_loop(axis, params, sg.n_true, dfp=False,
-                      delta_every=delta_every)
+                      delta_every=delta_every, trace=trace)
+    out_specs = (shard, P(), P()) if trace else (shard, P())
     fn = shard_map_loop(loop, mesh,
                         ({k: shard for k in _FIELDS}, shard, shard, shard),
-                        (shard, P()))
+                        out_specs)
     return jax.jit(fn)(_as_dict(sg), r0, on, off)
 
 
 def distributed_dfp_pagerank(mesh: Mesh, sg: ShardedGraph, r_prev: jnp.ndarray,
                              dv0: jnp.ndarray, dn0: jnp.ndarray,
                              params: PRParams = PRParams(),
-                             delta_every: int = 1):
+                             delta_every: int = 1, trace: bool = False):
     """DF-P on the cluster: dv0/dn0 are the initial affected / to-expand
     flags ([nd, n_loc], from `initial_affected_sharded`). Iteration 0 pulls
     dn0 through the layout — the paper's initial frontier expansion — so
-    callers seed raw flags; pre-expanded dv0 (with dn0 zeroed) also works."""
+    callers seed raw flags; pre-expanded dv0 (with dn0 zeroed) also works.
+    ``trace=True`` appends a replicated obs.trace.TraceBuffer."""
     axis, shard = _specs(mesh)
     loop = _make_loop(axis, params, sg.n_true, dfp=True,
-                      delta_every=delta_every)
+                      delta_every=delta_every, trace=trace)
+    out_specs = (shard, P(), P()) if trace else (shard, P())
     fn = shard_map_loop(loop, mesh,
                         ({k: shard for k in _FIELDS}, shard, shard, shard),
-                        (shard, P()))
+                        out_specs)
     return jax.jit(fn)(_as_dict(sg), r_prev, dv0, dn0)

@@ -30,6 +30,7 @@ from .distributed import shard_map_loop
 from .graph import Graph
 from .pagerank import PRParams
 from .rank_step import rank_step
+from ..obs.trace import trace_init, trace_record
 
 __all__ = ["Sharded2D", "build_sharded_2d", "pagerank_2d", "dfp_2d"]
 
@@ -108,7 +109,7 @@ def build_sharded_2d(g: Graph, r: int, c: int, d_p: int = 8) -> Sharded2D:
 
 
 def _loop_2d(params: PRParams, n_true: int, r: int, c: int, *, dfp: bool,
-             row_axis="data", col_axis="model"):
+             row_axis="data", col_axis="model", trace: bool = False):
     """Per-device while loop. Mesh axes: row_axis size r, col_axis size c.
 
     The per-iteration math is the shared `core.rank_step.rank_step` on the
@@ -116,7 +117,9 @@ def _loop_2d(params: PRParams, n_true: int, r: int, c: int, *, dfp: bool,
     (all-gather along the column axis, psum-scatter along the row axis,
     ppermute back to the owner — DESIGN.md §6). Frontier expansion runs at
     iteration 0 too, so δ_N may be seeded raw (paper's initial expansion,
-    device-side) exactly as in the 1-D engine."""
+    device-side) exactly as in the 1-D engine. ``trace`` carries an
+    obs.trace.TraceBuffer; channels are psum'd over both mesh axes so the
+    buffer is replicated (out_spec P())."""
 
     def loop(sgd, r0, dv0, dn0):
         ell_idx = sgd["ell_idx"][0]
@@ -143,53 +146,69 @@ def _loop_2d(params: PRParams, n_true: int, r: int, c: int, *, dfp: bool,
             return jax.lax.ppermute(piece, (row_axis, col_axis), perm)
 
         def body(state):
-            rank, dv, dn, _, it = state
+            rank, dv, dn, _, it, tb = state
             if dfp:
                 grow = pull(dn.astype(dt)) > 0          # Σ>0 ⇔ OR
                 dv = (dv | grow) & valid
             s = pull(rank / deg)
+            dv_in = dv & valid
             r_new, dv_new, dn_new, local = rank_step(
-                s, rank, dv & valid, out_deg, alpha=params.alpha,
+                s, rank, dv_in, out_deg, alpha=params.alpha,
                 n_norm=n_true, tau_f=params.tau_f, tau_p=params.tau_p,
                 prune=dfp, closed_form=dfp, track_frontier=dfp)
             if dfp:
                 dv, dn = dv_new, dn_new
             delta = jax.lax.pmax(local, (row_axis, col_axis))
-            return r_new, dv, dn, delta, it + 1
+            if trace:
+                counts = jnp.stack([
+                    jnp.sum(dv_in), jnp.sum(dn_new),
+                    jnp.sum(dv_in) - jnp.sum(dv_new & valid)]
+                ).astype(jnp.int32)
+                counts = jax.lax.psum(counts, (row_axis, col_axis))
+                tb = trace_record(tb, it, linf=delta, frontier=counts[0],
+                                  delta_n=counts[1] if dfp else 0,
+                                  pruned=counts[2] if dfp else 0)
+            return r_new, dv, dn, delta, it + 1, tb
 
         def cond(state):
-            *_, delta, it = state
+            _, _, _, delta, it, _ = state
             return (delta > params.tau) & (it < params.max_iter)
 
+        tb0 = trace_init(params.max_iter, dt,
+                         "dfp_2d" if dfp else "static_2d") if trace \
+            else jnp.asarray(0, jnp.int32)
         init = (rank0, dv0, dn0, jnp.asarray(jnp.inf, dt),
-                jnp.asarray(0, jnp.int32))
-        rank, dv, dn, _, iters = jax.lax.while_loop(cond, body, init)
-        return rank[None], iters
+                jnp.asarray(0, jnp.int32), tb0)
+        rank, dv, dn, _, iters, tb = jax.lax.while_loop(cond, body, init)
+        return (rank[None], iters, tb) if trace else (rank[None], iters)
 
     return loop
 
 
-def _run(mesh: Mesh, sg: Sharded2D, r0, dv0, dn0, params, dfp: bool):
+def _run(mesh: Mesh, sg: Sharded2D, r0, dv0, dn0, params, dfp: bool,
+         trace: bool = False):
     axes = mesh.axis_names
     row_axis, col_axis = axes[-2], axes[-1]
     shard = P((row_axis, col_axis))
     sgd = {"ell_idx": sg.ell_idx, "ell_mask": sg.ell_mask,
            "out_deg": sg.out_deg, "valid": sg.valid}
     loop = _loop_2d(params, sg.n_true, sg.r, sg.c, dfp=dfp,
-                    row_axis=row_axis, col_axis=col_axis)
+                    row_axis=row_axis, col_axis=col_axis, trace=trace)
+    out_specs = (shard, P(), P()) if trace else (shard, P())
     fn = shard_map_loop(loop, mesh,
                         ({k: shard for k in sgd}, shard, shard, shard),
-                        (shard, P()))
+                        out_specs)
     return jax.jit(fn)(sgd, r0, dv0, dn0)
 
 
-def pagerank_2d(mesh: Mesh, sg: Sharded2D, r0, params: PRParams = PRParams()):
+def pagerank_2d(mesh: Mesh, sg: Sharded2D, r0, params: PRParams = PRParams(),
+                trace: bool = False):
     rc, blk = sg.out_deg.shape
     on = jnp.ones((rc, blk), jnp.bool_)
     off = jnp.zeros((rc, blk), jnp.bool_)
-    return _run(mesh, sg, r0, on, off, params, dfp=False)
+    return _run(mesh, sg, r0, on, off, params, dfp=False, trace=trace)
 
 
 def dfp_2d(mesh: Mesh, sg: Sharded2D, r_prev, dv0, dn0,
-           params: PRParams = PRParams()):
-    return _run(mesh, sg, r_prev, dv0, dn0, params, dfp=True)
+           params: PRParams = PRParams(), trace: bool = False):
+    return _run(mesh, sg, r_prev, dv0, dn0, params, dfp=True, trace=trace)

@@ -16,6 +16,7 @@ import numpy as np
 
 from .frontier import expand_affected, initial_affected, reach_affected
 from .pagerank import DeviceGraph, PRParams, as_device_graph, update_ranks
+from ..obs.trace import trace_init, trace_record
 
 __all__ = ["DeviceBatch", "batch_to_device", "nd_pagerank", "dt_pagerank",
            "df_pagerank", "dfp_pagerank"]
@@ -43,67 +44,86 @@ def batch_to_device(batch, n: int, pad_to: int | None = None) -> DeviceBatch:
 
 def _loop(dg: DeviceGraph, r0: jnp.ndarray, dv0: jnp.ndarray,
           dn0: jnp.ndarray, params: PRParams, *, expand: bool, prune: bool,
-          closed_form: bool, pull_sum_fn=None
-          ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+          closed_form: bool, pull_sum_fn=None, tb=None, i_off=0):
     """Shared Alg. 2 loop. When `expand` is False the affected set is frozen
-    (ND/DT); δ_N is then never produced (track_frontier=False)."""
+    (ND/DT); δ_N is then never produced (track_frontier=False).
+
+    `tb` (obs.trace.TraceBuffer) switches on iteration telemetry: per-sweep
+    L∞, frontier size, δ_N and pruned counts recorded at `i_off + i` — the
+    offset lets the compact engine's dense fallback append to the buffer its
+    compact phase started. The rank math never reads the trace."""
 
     def body(state):
-        r, dv, dn, _, i = state
+        r, dv, dn, _, i, tb_ = state
         if expand:
             # paper line 16: expansion of the *previous* iteration's frontier,
             # performed only because convergence was not reached (cond passed).
             dv = jax.lax.cond(i > 0,
                               lambda: expand_affected(dg, dv, dn),
                               lambda: dv)
-        r_new, dv, dn, delta = update_ranks(
+        r_new, dv_new, dn_new, delta = update_ranks(
             dg, r, dv, alpha=params.alpha, tau_f=params.tau_f,
             tau_p=params.tau_p, prune=prune, closed_form=closed_form,
             track_frontier=expand, pull_sum_fn=pull_sum_fn)
-        return r_new, dv, dn, delta, i + 1
+        if tb is not None:
+            frontier = jnp.sum(dv)
+            pruned = frontier - jnp.sum(dv_new) if prune else 0
+            tb_ = trace_record(tb_, i_off + i, linf=delta, frontier=frontier,
+                               delta_n=jnp.sum(dn_new) if expand else 0,
+                               pruned=pruned)
+        return r_new, dv_new, dn_new, delta, i + 1, tb_
 
     def cond(state):
-        *_, delta, i = state
+        _, _, _, delta, i, _ = state
         return (delta > params.tau) & (i < params.max_iter)
 
     init = (r0, dv0, dn0, jnp.asarray(jnp.inf, r0.dtype),
-            jnp.asarray(0, jnp.int32))
-    r, _, _, _, iters = jax.lax.while_loop(cond, body, init)
-    return r, iters
+            jnp.asarray(0, jnp.int32),
+            jnp.asarray(0, jnp.int32) if tb is None else tb)
+    r, _, _, _, iters, tb_out = jax.lax.while_loop(cond, body, init)
+    return (r, iters) if tb is None else (r, iters, tb_out)
 
 
 def nd_pagerank(dg, r_prev: jnp.ndarray, params: PRParams = PRParams(),
-                pull_sum_fn=None):
+                pull_sum_fn=None, trace: bool = False):
     """Naive-dynamic: previous ranks as the initial guess, all vertices on.
 
     All four dynamic drivers accept a DeviceGraph or a pre-staged snapshot
-    (anything with a `.dg` attribute, e.g. repro.stream.DeviceSnapshot).
+    (anything with a `.dg` attribute, e.g. repro.stream.DeviceSnapshot),
+    and a ``trace=True`` flag returning (r, iters, obs.trace.TraceBuffer)
+    with identical ranks/iters to the untraced call.
     """
-    return _nd_pagerank(as_device_graph(dg), r_prev, params, pull_sum_fn)
+    return _nd_pagerank(as_device_graph(dg), r_prev, params, pull_sum_fn,
+                        trace)
 
 
-@functools.partial(jax.jit, static_argnames=("params", "pull_sum_fn"))
+@functools.partial(jax.jit, static_argnames=("params", "pull_sum_fn",
+                                             "trace"))
 def _nd_pagerank(dg: DeviceGraph, r_prev: jnp.ndarray,
-                 params: PRParams = PRParams(), pull_sum_fn=None):
+                 params: PRParams = PRParams(), pull_sum_fn=None,
+                 trace: bool = False):
     n = dg.n
     on = jnp.ones((n,), jnp.bool_)
     off = jnp.zeros((n,), jnp.bool_)
+    tb = trace_init(params.max_iter, r_prev.dtype, "nd") if trace else None
     return _loop(dg, r_prev, on, off, params, expand=False, prune=False,
-                 closed_form=False, pull_sum_fn=pull_sum_fn)
+                 closed_form=False, pull_sum_fn=pull_sum_fn, tb=tb)
 
 
 def dt_pagerank(dg, dg_prev, r_prev: jnp.ndarray, batch: DeviceBatch,
-                params: PRParams = PRParams(), pull_sum_fn=None):
+                params: PRParams = PRParams(), pull_sum_fn=None,
+                trace: bool = False):
     """Dynamic Traversal (Desikan et al.): mark everything reachable from the
     updated vertices in G^{t-1} ∪ G^t, then iterate on that frozen set."""
     return _dt_pagerank(as_device_graph(dg), as_device_graph(dg_prev),
-                        r_prev, batch, params, pull_sum_fn)
+                        r_prev, batch, params, pull_sum_fn, trace)
 
 
-@functools.partial(jax.jit, static_argnames=("params", "pull_sum_fn"))
+@functools.partial(jax.jit, static_argnames=("params", "pull_sum_fn",
+                                             "trace"))
 def _dt_pagerank(dg: DeviceGraph, dg_prev: DeviceGraph, r_prev: jnp.ndarray,
                  batch: DeviceBatch, params: PRParams = PRParams(),
-                 pull_sum_fn=None):
+                 pull_sum_fn=None, trace: bool = False):
     n = dg.n
     seeds = jnp.zeros((n,), jnp.bool_)
     seeds = seeds.at[batch.del_src].set(True, mode="drop")
@@ -112,43 +132,53 @@ def _dt_pagerank(dg: DeviceGraph, dg_prev: DeviceGraph, r_prev: jnp.ndarray,
     seeds = seeds.at[batch.ins_dst].set(True, mode="drop")
     affected = reach_affected(dg, seeds) | reach_affected(dg_prev, seeds)
     off = jnp.zeros((n,), jnp.bool_)
+    tb = trace_init(params.max_iter, r_prev.dtype, "dt") if trace else None
     return _loop(dg, r_prev, affected, off, params, expand=False, prune=False,
-                 closed_form=False, pull_sum_fn=pull_sum_fn)
+                 closed_form=False, pull_sum_fn=pull_sum_fn, tb=tb)
 
 
 def _df_like(dg: DeviceGraph, r_prev: jnp.ndarray, batch: DeviceBatch,
-             params: PRParams, *, prune: bool, pull_sum_fn=None):
+             params: PRParams, *, prune: bool, pull_sum_fn=None,
+             trace: bool = False):
     n = dg.n
     dv, dn = initial_affected(n, batch.del_src, batch.del_dst, batch.ins_src)
     dv = expand_affected(dg, dv, dn)      # paper line 9: initial expansion
     dn0 = jnp.zeros((n,), jnp.bool_)
+    tb = trace_init(params.max_iter, r_prev.dtype,
+                    "dfp" if prune else "df") if trace else None
     return _loop(dg, r_prev, dv, dn0, params, expand=True, prune=prune,
-                 closed_form=prune, pull_sum_fn=pull_sum_fn)
+                 closed_form=prune, pull_sum_fn=pull_sum_fn, tb=tb)
 
 
 def df_pagerank(dg, r_prev: jnp.ndarray, batch: DeviceBatch,
-                params: PRParams = PRParams(), pull_sum_fn=None):
+                params: PRParams = PRParams(), pull_sum_fn=None,
+                trace: bool = False):
     """Dynamic Frontier: incremental expansion, no pruning (Eq. 1 update)."""
     return _df_pagerank(as_device_graph(dg), r_prev, batch, params,
-                        pull_sum_fn)
+                        pull_sum_fn, trace)
 
 
-@functools.partial(jax.jit, static_argnames=("params", "pull_sum_fn"))
+@functools.partial(jax.jit, static_argnames=("params", "pull_sum_fn",
+                                             "trace"))
 def _df_pagerank(dg: DeviceGraph, r_prev: jnp.ndarray, batch: DeviceBatch,
-                 params: PRParams = PRParams(), pull_sum_fn=None):
+                 params: PRParams = PRParams(), pull_sum_fn=None,
+                 trace: bool = False):
     return _df_like(dg, r_prev, batch, params, prune=False,
-                    pull_sum_fn=pull_sum_fn)
+                    pull_sum_fn=pull_sum_fn, trace=trace)
 
 
 def dfp_pagerank(dg, r_prev: jnp.ndarray, batch: DeviceBatch,
-                 params: PRParams = PRParams(), pull_sum_fn=None):
+                 params: PRParams = PRParams(), pull_sum_fn=None,
+                 trace: bool = False):
     """Dynamic Frontier with Pruning: expansion + pruning, closed form Eq. 2."""
     return _dfp_pagerank(as_device_graph(dg), r_prev, batch, params,
-                         pull_sum_fn)
+                         pull_sum_fn, trace)
 
 
-@functools.partial(jax.jit, static_argnames=("params", "pull_sum_fn"))
+@functools.partial(jax.jit, static_argnames=("params", "pull_sum_fn",
+                                             "trace"))
 def _dfp_pagerank(dg: DeviceGraph, r_prev: jnp.ndarray, batch: DeviceBatch,
-                  params: PRParams = PRParams(), pull_sum_fn=None):
+                  params: PRParams = PRParams(), pull_sum_fn=None,
+                  trace: bool = False):
     return _df_like(dg, r_prev, batch, params, prune=True,
-                    pull_sum_fn=pull_sum_fn)
+                    pull_sum_fn=pull_sum_fn, trace=trace)

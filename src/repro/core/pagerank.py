@@ -21,6 +21,7 @@ import numpy as np
 
 from .graph import Graph, HybridLayout, build_hybrid
 from .rank_step import rank_step
+from ..obs.trace import trace_init, trace_record
 
 __all__ = [
     "DeviceGraph", "to_device", "as_device_graph", "pull_sum", "pull_max",
@@ -176,34 +177,44 @@ def update_ranks(dg: DeviceGraph, r: jnp.ndarray, affected: jnp.ndarray,
 # ---------------------------------------------------------------------------
 
 def static_pagerank(dg, r0: jnp.ndarray, params: PRParams = PRParams(),
-                    pull_sum_fn=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Power iteration to L-inf tolerance. Returns (ranks, n_iters).
+                    pull_sum_fn=None, trace: bool = False):
+    """Power iteration to L-inf tolerance. Returns (ranks, n_iters) — or
+    (ranks, n_iters, TraceBuffer) with ``trace=True``, which carries the
+    per-iteration L∞ series through the loop as aux state (obs.trace;
+    identical ranks either way, no host callbacks).
 
     `dg` may be a DeviceGraph or any pre-staged snapshot (see as_device_graph).
     """
-    return _static_pagerank(as_device_graph(dg), r0, params, pull_sum_fn)
+    return _static_pagerank(as_device_graph(dg), r0, params, pull_sum_fn,
+                            trace)
 
 
-@functools.partial(jax.jit, static_argnames=("params", "pull_sum_fn"))
+@functools.partial(jax.jit, static_argnames=("params", "pull_sum_fn",
+                                             "trace"))
 def _static_pagerank(dg: DeviceGraph, r0: jnp.ndarray,
                      params: PRParams = PRParams(),
-                     pull_sum_fn=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+                     pull_sum_fn=None, trace: bool = False):
     n = dg.n
     all_on = jnp.ones((n,), dtype=jnp.bool_)
+    zero = jnp.asarray(0, jnp.int32)
 
     def body(state):
-        r, _, i = state
+        r, _, i, tb = state
         r_new, _, _, delta = update_ranks(
             dg, r, all_on, alpha=params.alpha, tau_f=params.tau_f,
             tau_p=params.tau_p, prune=False, closed_form=False,
             track_frontier=False, pull_sum_fn=pull_sum_fn)
-        return r_new, delta, i + 1
+        if trace:
+            tb = trace_record(tb, i, linf=delta, frontier=n, delta_n=0,
+                              pruned=0)
+        return r_new, delta, i + 1, tb
 
     def cond(state):
-        _, delta, i = state
+        _, delta, i, _ = state
         return (delta > params.tau) & (i < params.max_iter)
 
     r0 = r0.astype(r0.dtype)
-    init = (r0, jnp.asarray(jnp.inf, r0.dtype), jnp.asarray(0, jnp.int32))
-    r, _, iters = jax.lax.while_loop(cond, body, init)
-    return r, iters
+    tb0 = trace_init(params.max_iter, r0.dtype, "static") if trace else zero
+    init = (r0, jnp.asarray(jnp.inf, r0.dtype), zero, tb0)
+    r, _, iters, tb = jax.lax.while_loop(cond, body, init)
+    return (r, iters, tb) if trace else (r, iters)

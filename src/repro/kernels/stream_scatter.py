@@ -21,6 +21,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ..obs.spans import get_registry as _obs
 from .ops import default_interpret as _default_interpret
 
 __all__ = ["scatter_rows", "ell_scatter_rows"]
@@ -39,6 +40,11 @@ def scatter_rows(dst: jnp.ndarray, rows: jnp.ndarray, new_rows: jnp.ndarray,
     """
     interpret = _default_interpret() if interpret is None else interpret
     k, d = new_rows.shape
+    # trace-time only (the call site is jitted): counts kernel *builds*, and
+    # rows are counted per build — re-executions of the cached computation
+    # are invisible to host counters by design.
+    _obs().inc("kernels.stream_scatter.calls")
+    _obs().inc("kernels.stream_scatter.rows", k)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(k,),

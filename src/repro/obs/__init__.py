@@ -1,0 +1,27 @@
+"""repro.obs — observability layer: iteration traces, spans, sinks, gates.
+
+The paper's headline claims are observability claims (iterations to
+convergence, fraction of affected vertices per batch, per-kernel time
+splits — Figs. 1-5); this subsystem makes every one of them inspectable:
+
+  * `trace`  — fixed-shape ``TraceBuffer`` carried through every engine's
+    ``lax.while_loop`` as aux state (opt-in ``trace=True``; no host
+    callbacks in the hot path; ranks identical with tracing off or on);
+  * `spans`  — host-side wall-clock spans + monotonic counters with
+    optional ``jax.profiler`` trace annotations around kernel dispatch;
+  * `report` — ``RunReport`` structured sink (JSON / JSONL) behind
+    ``benchmarks.run``'s ``BENCH_obs.json``;
+  * `check`  — ``python -m repro.obs.check`` regression gate diffing two
+    bench reports (see DESIGN.md §10).
+"""
+from .trace import (ENGINE_IDS, ENGINE_NAMES, TraceBuffer, maybe_summary,
+                    trace_init, trace_record, trace_summary)
+from .spans import Registry, Span, get_registry, reset_registry
+from .report import RunReport, load_report, validate_report
+
+__all__ = [
+    "ENGINE_IDS", "ENGINE_NAMES", "TraceBuffer", "maybe_summary",
+    "trace_init", "trace_record", "trace_summary",
+    "Registry", "Span", "get_registry", "reset_registry",
+    "RunReport", "load_report", "validate_report",
+]

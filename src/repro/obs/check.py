@@ -1,0 +1,135 @@
+"""Regression gate: diff two ``BENCH_obs.json`` reports, fail on slowdowns.
+
+    python -m repro.obs.check CURRENT.json BASELINE.json [--threshold 0.10]
+    python -m repro.obs.check CURRENT.json --against seed [--threshold ...]
+
+Exit codes: 0 clean, 1 regression (or schema failure / missing benchmark),
+2 usage / IO error.
+
+A benchmark regresses when ``us_mean`` grows by more than ``--threshold``
+(fraction; default 0.10 = +10%) over the baseline, subject to a
+``--min-us`` floor (default 50µs: sub-floor benches are timer noise).
+Benchmarks present in the baseline but absent from the current report fail
+the gate too — a silently dropped bench is how regressions hide.
+
+``--against seed`` resolves the committed machine-reference baseline
+(``benchmarks/seed/BENCH_obs_seed.json``, override via ``$REPRO_BENCH_SEED``).
+Cross-machine timing is not comparable at 10%, so CI pairs ``--against
+seed`` with a catastrophic-only threshold (see .github/workflows/ci.yml);
+the strict default is for same-machine before/after runs. A missing seed
+baseline passes with a warning unless ``--strict`` (first run bootstraps).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+from pathlib import Path
+
+from .report import load_report, validate_report
+
+__all__ = ["main", "compare"]
+
+
+def _seed_path() -> Path:
+    env = os.environ.get("REPRO_BENCH_SEED")
+    if env:
+        return Path(env)
+    # src/repro/obs/check.py -> repo root is three levels above src/
+    root = Path(__file__).resolve().parents[3]
+    return root / "benchmarks" / "seed" / "BENCH_obs_seed.json"
+
+
+def compare(current: dict, baseline: dict, threshold: float,
+            min_us: float) -> tuple:
+    """Returns (failures, lines): failure strings + a human diff table."""
+    failures, lines = [], []
+    cur = {b["name"]: b for b in current.get("benchmarks", [])}
+    base = {b["name"]: b for b in baseline.get("benchmarks", [])}
+    for name, b in sorted(base.items()):
+        c = cur.get(name)
+        if c is None:
+            failures.append(f"missing benchmark: {name}")
+            lines.append(f"  {name:<48} MISSING from current report")
+            continue
+        b_us, c_us = float(b["us_mean"]), float(c["us_mean"])
+        if b_us < min_us and c_us < min_us:
+            lines.append(f"  {name:<48} {b_us:>10.1f} -> {c_us:>10.1f} us"
+                         f"  (below {min_us:g}us floor, skipped)")
+            continue
+        rel = (c_us - b_us) / max(b_us, 1e-9)
+        mark = ""
+        if rel > threshold:
+            mark = "  REGRESSION"
+            failures.append(
+                f"{name}: {b_us:.1f}us -> {c_us:.1f}us (+{rel * 100:.1f}% "
+                f"> {threshold * 100:.0f}%)")
+        lines.append(f"  {name:<48} {b_us:>10.1f} -> {c_us:>10.1f} us"
+                     f"  ({rel * +100:+.1f}%){mark}")
+    extra = sorted(set(cur) - set(base))
+    for name in extra:
+        lines.append(f"  {name:<48} (new, no baseline)")
+    return failures, lines
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.obs.check",
+        description="Diff two BENCH_obs.json reports; fail on regressions.")
+    p.add_argument("current", help="current BENCH_obs.json")
+    p.add_argument("baseline", nargs="?", help="baseline BENCH_obs.json")
+    p.add_argument("--against", choices=["seed"],
+                   help="use the committed seed baseline")
+    p.add_argument("--threshold", type=float, default=0.10,
+                   help="max allowed us_mean growth fraction (default 0.10)")
+    p.add_argument("--min-us", type=float, default=50.0,
+                   help="ignore benches faster than this (timer noise)")
+    p.add_argument("--strict", action="store_true",
+                   help="fail (not warn) when the baseline file is missing")
+    args = p.parse_args(argv)
+
+    if (args.baseline is None) == (args.against is None):
+        p.error("give exactly one of BASELINE or --against seed")
+    base_path = Path(args.baseline) if args.baseline else _seed_path()
+
+    try:
+        current = load_report(args.current)
+    except (OSError, ValueError) as e:
+        print(f"error: cannot read current report: {e}", file=sys.stderr)
+        return 2
+    errs = validate_report(current)
+    if errs:
+        print("current report fails schema validation:", file=sys.stderr)
+        for e in errs:
+            print(f"  {e}", file=sys.stderr)
+        return 1
+
+    if not base_path.exists():
+        msg = f"baseline not found: {base_path}"
+        if args.strict:
+            print(f"error: {msg}", file=sys.stderr)
+            return 2
+        print(f"warning: {msg} — nothing to gate against (bootstrap run)")
+        return 0
+    try:
+        baseline = load_report(str(base_path))
+    except (OSError, ValueError) as e:
+        print(f"error: cannot read baseline: {e}", file=sys.stderr)
+        return 2
+
+    failures, lines = compare(current, baseline, args.threshold, args.min_us)
+    print(f"repro.obs.check: {args.current} vs {base_path} "
+          f"(threshold +{args.threshold * 100:.0f}%)")
+    for ln in lines:
+        print(ln)
+    if failures:
+        print(f"\nFAIL: {len(failures)} regression(s)")
+        for f in failures:
+            print(f"  {f}")
+        return 1
+    print("\nOK: no regressions")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,124 @@
+"""Iteration-level telemetry: a fixed-shape trace carried through the loop.
+
+Every engine's convergence loop is a jitted ``lax.while_loop``; host
+callbacks from inside it would serialize the hot path. Instead the trace is
+an ordinary piece of loop state — a ``TraceBuffer`` of ``[max_iter]``-shaped
+arrays written once per iteration with ``.at[i].set`` — so tracing adds a
+few reductions and scatters per iteration and *no* host synchronization.
+The buffer leaves the loop with the final state and is summarized host-side
+(`trace_summary`) after the solve completes.
+
+Invariant (tested): the rank math never reads the trace, so ``trace=True``
+produces bit-identical ranks and iteration counts to ``trace=False``.
+
+Per-iteration channels (the paper's Fig. 1-5 quantities):
+
+  linf      L∞ |Δr| of the sweep — the convergence curve
+  frontier  |{v : δ_V[v]}| entering the sweep (post-expansion) — the
+            "fraction of vertices affected" series
+  delta_n   |{v : δ_N[v]}| flagged for the next expansion
+  pruned    vertices dropped from δ_V by the τ_p prune this iteration
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["ENGINE_IDS", "ENGINE_NAMES", "TraceBuffer", "trace_init",
+           "trace_record", "trace_summary"]
+
+# Stable engine ids (the TraceBuffer stores the id; sinks store the name).
+ENGINE_IDS = {
+    "static": 0, "nd": 1, "dt": 2, "df": 3, "dfp": 4,
+    "df_compact": 5, "dfp_compact": 6,
+    "static_1d": 7, "dfp_1d": 8, "static_2d": 9, "dfp_2d": 10,
+}
+ENGINE_NAMES = {v: k for k, v in ENGINE_IDS.items()}
+
+
+class TraceBuffer(NamedTuple):
+    """Per-iteration telemetry, fixed shape [cap] (cap = params.max_iter)."""
+    linf: jnp.ndarray      # [cap] rank dtype; L-inf |dr| per iteration
+    frontier: jnp.ndarray  # [cap] int32; |affected| entering the sweep
+    delta_n: jnp.ndarray   # [cap] int32; |delta_N| flagged this iteration
+    pruned: jnp.ndarray    # [cap] int32; vertices pruned from affected
+    engine: jnp.ndarray    # []    int32; ENGINE_IDS value
+
+    @property
+    def cap(self) -> int:
+        return self.linf.shape[0]
+
+
+def trace_init(cap: int, dtype, engine: str) -> TraceBuffer:
+    """Fresh buffer. Unwritten lanes stay at the -1 / NaN sentinels so a
+    summary truncated by a wrong iteration count is visibly wrong rather
+    than silently zero."""
+    return TraceBuffer(
+        linf=jnp.full((cap,), jnp.nan, dtype),
+        frontier=jnp.full((cap,), -1, jnp.int32),
+        delta_n=jnp.full((cap,), -1, jnp.int32),
+        pruned=jnp.full((cap,), -1, jnp.int32),
+        engine=jnp.asarray(ENGINE_IDS[engine], jnp.int32))
+
+
+def trace_record(tb: TraceBuffer, i: jnp.ndarray, *, linf, frontier,
+                 delta_n, pruned) -> TraceBuffer:
+    """Write iteration i's channels (drop-mode: an out-of-cap write — only
+    possible via a caller's offset arithmetic — is a no-op, never OOB)."""
+    return TraceBuffer(
+        linf=tb.linf.at[i].set(jnp.asarray(linf, tb.linf.dtype),
+                               mode="drop"),
+        frontier=tb.frontier.at[i].set(
+            jnp.asarray(frontier, jnp.int32), mode="drop"),
+        delta_n=tb.delta_n.at[i].set(
+            jnp.asarray(delta_n, jnp.int32), mode="drop"),
+        pruned=tb.pruned.at[i].set(
+            jnp.asarray(pruned, jnp.int32), mode="drop"),
+        engine=tb.engine)
+
+
+def _col(x: np.ndarray) -> list:
+    """JSON-safe python list (non-finite floats -> None: strict JSON has no
+    Infinity/NaN; the inf lanes are the distributed delta_every skip marker
+    and the compact engine's overflow marker)."""
+    out = []
+    for v in x.tolist():
+        if isinstance(v, float) and not np.isfinite(v):
+            out.append(None)
+        else:
+            out.append(v)
+    return out
+
+
+def trace_summary(tb: TraceBuffer, iters) -> dict:
+    """Host-side summary of a completed solve: series trimmed to the actual
+    iteration count, plus the derived scalars the bench sink stores."""
+    it = int(iters)
+    linf = np.asarray(tb.linf)[:it]
+    frontier = np.asarray(tb.frontier)[:it]
+    finite = linf[np.isfinite(linf)]
+    return {
+        "engine": ENGINE_NAMES[int(tb.engine)],
+        "iters": it,
+        "linf_delta": _col(linf),
+        "frontier": _col(frontier),
+        "delta_n": _col(np.asarray(tb.delta_n)[:it]),
+        "pruned": _col(np.asarray(tb.pruned)[:it]),
+        "frontier_peak": int(frontier.max()) if it else 0,
+        "frontier_final": int(frontier[-1]) if it else 0,
+        "linf_final": float(finite[-1]) if finite.size else None,
+    }
+
+
+def maybe_summary(result, trace: bool) -> tuple:
+    """Split an engine return into ((ranks, iters), summary-or-None).
+
+    Engines return (r, iters) untraced and (r, iters, TraceBuffer) traced;
+    callers that thread a ``trace`` flag through (StreamSession, benches)
+    use this to stay agnostic."""
+    if not trace:
+        return result, None
+    r, iters, tb = result
+    return (r, iters), trace_summary(tb, iters)

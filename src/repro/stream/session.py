@@ -37,6 +37,8 @@ from ..core.distributed import (distributed_dfp_pagerank,
 from ..core.dynamic import df_pagerank, dfp_pagerank
 from ..core.graph import BatchUpdate, Graph
 from ..core.pagerank import PRParams, init_ranks, static_pagerank
+from ..obs.spans import get_registry as _obs
+from ..obs.trace import maybe_summary
 from .delta import Delta, ingest
 from .sharded import ShardedSnapshot
 from .snapshot import DeviceSnapshot, SnapshotStats
@@ -70,6 +72,9 @@ class BatchStats:
     ingest_s: float
     snapshot: SnapshotStats
     solve_s: float
+    #: per-iteration trace summary (`obs.trace.trace_summary` dict) when the
+    #: session was built with ``trace=True``; None otherwise.
+    trace: Optional[dict] = None
 
     @property
     def total_s(self) -> float:
@@ -94,9 +99,14 @@ class StreamSession:
     def __init__(self, g: Graph, params: Optional[PRParams] = None,
                  d_p: int = 64, tile: int = 256, engine: str = "auto",
                  prune: bool = True, compact_threshold: float = 0.015,
-                 snapshot=None, mesh=None, **snap_kw):
+                 snapshot=None, mesh=None, trace: bool = False, **snap_kw):
         if engine not in ("auto", "dense", "compact"):
             raise ValueError(f"unknown engine: {engine!r}")
+        #: when True every solve threads an iteration TraceBuffer through the
+        #: engine and each BatchStats carries its `trace_summary` dict.
+        #: `trace` is a jit static arg, so on/off paths compile separately
+        #: and the off path is byte-identical to an untraced session.
+        self.trace = trace
         # Session default: frontier thresholds at 1e-9 (vs the one-shot
         # default 1e-6). Chained DF-P re-uses its own output as the next
         # prior, so per-batch frontier truncation error would otherwise
@@ -132,33 +142,44 @@ class StreamSession:
     def apply(self, batch: BatchUpdate | Delta) -> jnp.ndarray:
         """Apply Δ^t and return the new rank vector (device-resident;
         stacked [nd, n_loc] in mesh mode — see `flat_ranks`)."""
+        obs = _obs()
         t0 = time.perf_counter()
-        delta = batch if isinstance(batch, Delta) else ingest(batch, self.n)
-        db = delta.to_device()
+        with obs.span("session.ingest"):
+            delta = batch if isinstance(batch, Delta) else ingest(
+                batch, self.n)
+            db = delta.to_device()
         ingest_s = time.perf_counter() - t0
 
         snap_stats = self.snap.apply(delta)
 
         t1 = time.perf_counter()
         engine = self._choose_engine(delta)
-        if engine == "sharded":
-            dv0, dn0 = initial_affected_sharded(
-                self.snap.nd, self.snap.n_loc, db)
-            r, iters = distributed_dfp_pagerank(
-                self.mesh, self.snap.sg, self.ranks, dv0, dn0, self.params)
-        elif engine == "compact":
-            fn = dfp_pagerank_compact if self.prune else df_pagerank_compact
-            r, iters = fn(self.snap, None, self.ranks, db, self.params)
-        else:
-            fn = dfp_pagerank if self.prune else df_pagerank
-            r, iters = fn(self.snap, self.ranks, db, self.params)
-        r = jax.block_until_ready(r)
+        obs.inc(f"session.engine.{engine}")
+        with obs.span("session.solve", annotate=True):
+            if engine == "sharded":
+                dv0, dn0 = initial_affected_sharded(
+                    self.snap.nd, self.snap.n_loc, db)
+                out = distributed_dfp_pagerank(
+                    self.mesh, self.snap.sg, self.ranks, dv0, dn0,
+                    self.params, trace=self.trace)
+            elif engine == "compact":
+                fn = (dfp_pagerank_compact if self.prune
+                      else df_pagerank_compact)
+                out = fn(self.snap, None, self.ranks, db, self.params,
+                         trace=self.trace)
+            else:
+                fn = dfp_pagerank if self.prune else df_pagerank
+                out = fn(self.snap, self.ranks, db, self.params,
+                         trace=self.trace)
+            (r, iters), summary = maybe_summary(out, self.trace)
+            r = jax.block_until_ready(r)
         solve_s = time.perf_counter() - t1
 
         self.ranks = r
         self.history.append(BatchStats(
             batch_size=delta.size, engine=engine, iters=int(iters),
-            ingest_s=ingest_s, snapshot=snap_stats, solve_s=solve_s))
+            ingest_s=ingest_s, snapshot=snap_stats, solve_s=solve_s,
+            trace=summary))
         return r
 
     def _choose_engine(self, delta: Delta) -> str:

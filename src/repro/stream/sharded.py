@@ -41,6 +41,7 @@ from ..core.distributed import (ShardedGraph, shard_block_rows, shard_bounds,
                                 sharded_need)
 from ..core.graph import (Graph, build_hybrid_rows, edge_keys,
                           graph_from_sorted_keys, next_pow2)
+from ..obs.spans import get_registry as _obs
 from .delta import Delta
 from .snapshot import (CapacityError, SnapshotStats, _HalfLayout, _pad_rows,
                        _scatter_1d, apply_net_delta, rebuild_reason)
@@ -164,17 +165,27 @@ class ShardedSnapshot:
     # -- the batch-update lifecycle ------------------------------------------
 
     def apply(self, delta: Delta) -> SnapshotStats:
-        """Apply a canonical Δ^t in place; returns per-apply stats."""
+        """Apply a canonical Δ^t in place; returns per-apply stats.
+
+        Feeds the same obs span/counter names as `DeviceSnapshot.apply`
+        (prefix ``snapshot.``) so dashboards see one stream regardless of
+        session mode, plus ``snapshot.shard_scatters`` for the stacked-row
+        scatter count."""
+        obs = _obs()
         t0 = time.perf_counter()
         stats = SnapshotStats()
-        self._keys, (d_s, d_d), (i_s, i_d) = apply_net_delta(
-            self._keys, self.n, delta, self._indeg, self._outdeg)
+        with obs.span("snapshot.apply_net_delta"):
+            self._keys, (d_s, d_d), (i_s, i_d) = apply_net_delta(
+                self._keys, self.n, delta, self._indeg, self._outdeg)
         stats.net_del, stats.net_ins = int(d_s.size), int(i_s.size)
 
         reason = rebuild_reason(delta.size, self.m, self.fragmentation(),
                                 self.rebuild_threshold, self.frag_budget)
         if reason is not None:
-            self._rebuild(reason)
+            with obs.span("snapshot.rebuild"):
+                self._rebuild(reason)
+            obs.inc("snapshot.rebuilds")
+            obs.inc(f"snapshot.rebuild.{reason.split(':')[0]}")
             stats.rebuilt, stats.rebuild_reason = True, reason
             stats.host_s = time.perf_counter() - t0
             return stats
@@ -183,13 +194,17 @@ class ShardedSnapshot:
         mig0 = sum(h.migrations for h in self._halves)
         try:
             # pull orientation: row = destination vertex, entry = source
-            for u, v in zip(d_s.tolist(), d_d.tolist()):
-                self._halves[v // n_loc].delete(v % n_loc, u)
-            for u, v in zip(i_s.tolist(), i_d.tolist()):
-                self._halves[v // n_loc].insert(v % n_loc, u)
+            with obs.span("snapshot.host_edit"):
+                for u, v in zip(d_s.tolist(), d_d.tolist()):
+                    self._halves[v // n_loc].delete(v % n_loc, u)
+                for u, v in zip(i_s.tolist(), i_d.tolist()):
+                    self._halves[v // n_loc].insert(v % n_loc, u)
         except CapacityError as e:
             # mirrors are mid-edit but the key set is complete: rebuild
-            self._rebuild(f"capacity:{e}")
+            with obs.span("snapshot.rebuild"):
+                self._rebuild(f"capacity:{e}")
+            obs.inc("snapshot.rebuilds")
+            obs.inc("snapshot.rebuild.capacity")
             stats.rebuilt, stats.rebuild_reason = True, f"capacity:{e}"
             stats.host_s = time.perf_counter() - t0
             return stats
@@ -197,41 +212,49 @@ class ShardedSnapshot:
         stats.migrations = sum(h.migrations for h in self._halves) - mig0
         stats.host_s = time.perf_counter() - t0
         t1 = time.perf_counter()
-        for s, half in enumerate(self._halves):
-            rows, tiles, rowmap_dirty, side_dirty = half.drain_dirty()
-            js = jnp.asarray(s)
-            if rows.size:
-                at = _pad_rows(rows, next_pow2(rows.size))
-                self.dev_ell_idx = _scatter_shard_rows(
-                    self.dev_ell_idx, js, jnp.asarray(at),
-                    jnp.asarray(half.ell_idx[at]))
-                self.dev_ell_mask = _scatter_shard_rows(
-                    self.dev_ell_mask, js, jnp.asarray(at),
-                    jnp.asarray(half.ell_mask[at]))
-            if tiles.size:
-                at = _pad_rows(tiles, next_pow2(tiles.size))
-                self.dev_hi_tiles = _scatter_shard_rows(
-                    self.dev_hi_tiles, js, jnp.asarray(at),
-                    jnp.asarray(half.hi_tiles[at]))
-                self.dev_hi_tmask = _scatter_shard_rows(
-                    self.dev_hi_tmask, js, jnp.asarray(at),
-                    jnp.asarray(half.hi_tmask[at]))
-            # small per-shard 1-D side tables, restaged only when touched
-            if rowmap_dirty:
-                self.dev_hi_rowmap = self.dev_hi_rowmap.at[s].set(
-                    jnp.asarray(half.hi_rowmap.copy()))
-            if side_dirty:
-                self.dev_hi_pos = self.dev_hi_pos.at[s].set(
-                    jnp.asarray(half.hi_ids.copy()))
-            stats.rows_touched += int(rows.size)
-            stats.tiles_touched += int(tiles.size)
-        touched = np.unique(np.concatenate([d_s, i_s]))
-        if touched.size:
-            at = _pad_rows(touched.astype(np.int32),
-                           next_pow2(touched.size))
-            flat = self._dev_outdeg.reshape(-1)
-            flat = _scatter_1d(flat, jnp.asarray(at),
-                               jnp.asarray(self._outdeg[at].astype(np.int32)))
-            self._dev_outdeg = flat.reshape(self.nd, self.n_loc)
+        with obs.span("snapshot.device_refresh", annotate=True):
+            for s, half in enumerate(self._halves):
+                rows, tiles, rowmap_dirty, side_dirty = half.drain_dirty()
+                js = jnp.asarray(s)
+                if rows.size:
+                    at = _pad_rows(rows, next_pow2(rows.size))
+                    self.dev_ell_idx = _scatter_shard_rows(
+                        self.dev_ell_idx, js, jnp.asarray(at),
+                        jnp.asarray(half.ell_idx[at]))
+                    self.dev_ell_mask = _scatter_shard_rows(
+                        self.dev_ell_mask, js, jnp.asarray(at),
+                        jnp.asarray(half.ell_mask[at]))
+                    obs.inc("snapshot.shard_scatters")
+                if tiles.size:
+                    at = _pad_rows(tiles, next_pow2(tiles.size))
+                    self.dev_hi_tiles = _scatter_shard_rows(
+                        self.dev_hi_tiles, js, jnp.asarray(at),
+                        jnp.asarray(half.hi_tiles[at]))
+                    self.dev_hi_tmask = _scatter_shard_rows(
+                        self.dev_hi_tmask, js, jnp.asarray(at),
+                        jnp.asarray(half.hi_tmask[at]))
+                    obs.inc("snapshot.shard_scatters")
+                # small per-shard 1-D side tables, restaged only when touched
+                if rowmap_dirty:
+                    self.dev_hi_rowmap = self.dev_hi_rowmap.at[s].set(
+                        jnp.asarray(half.hi_rowmap.copy()))
+                if side_dirty:
+                    self.dev_hi_pos = self.dev_hi_pos.at[s].set(
+                        jnp.asarray(half.hi_ids.copy()))
+                stats.rows_touched += int(rows.size)
+                stats.tiles_touched += int(tiles.size)
+            touched = np.unique(np.concatenate([d_s, i_s]))
+            if touched.size:
+                at = _pad_rows(touched.astype(np.int32),
+                               next_pow2(touched.size))
+                flat = self._dev_outdeg.reshape(-1)
+                flat = _scatter_1d(
+                    flat, jnp.asarray(at),
+                    jnp.asarray(self._outdeg[at].astype(np.int32)))
+                self._dev_outdeg = flat.reshape(self.nd, self.n_loc)
+        obs.inc("snapshot.inplace_batches")
+        obs.inc("snapshot.rows_touched", stats.rows_touched)
+        obs.inc("snapshot.tiles_touched", stats.tiles_touched)
+        obs.inc("snapshot.migrations", stats.migrations)
         stats.device_s = time.perf_counter() - t1
         return stats

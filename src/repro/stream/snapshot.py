@@ -44,6 +44,7 @@ import numpy as np
 from ..core.graph import (Graph, HybridLayout, build_hybrid, edge_keys,
                           graph_from_sorted_keys, keys_to_edges)
 from ..core.pagerank import DeviceGraph
+from ..obs.spans import get_registry as _obs
 from .delta import Delta, next_pow2
 
 __all__ = ["CapacityError", "DeviceSnapshot", "SnapshotStats"]
@@ -498,32 +499,46 @@ class DeviceSnapshot:
     # -- the batch-update lifecycle ------------------------------------------
 
     def apply(self, delta: Delta) -> SnapshotStats:
-        """Apply a canonical Δ^t in place; returns per-apply stats."""
+        """Apply a canonical Δ^t in place; returns per-apply stats.
+
+        Every apply also feeds the process-wide obs registry: spans for the
+        host-edit and device-refresh phases, counters for the in-place vs
+        rebuild decision, scatter traffic and degree-crossing migrations
+        (span/counter names: DESIGN.md §10)."""
+        obs = _obs()
         t0 = time.perf_counter()
         stats = SnapshotStats()
-        self._keys, (d_s, d_d), (i_s, i_d) = apply_net_delta(
-            self._keys, self.n, delta, self._indeg, self._outdeg)
+        with obs.span("snapshot.apply_net_delta"):
+            self._keys, (d_s, d_d), (i_s, i_d) = apply_net_delta(
+                self._keys, self.n, delta, self._indeg, self._outdeg)
         stats.net_del, stats.net_ins = int(d_s.size), int(i_s.size)
 
         reason = rebuild_reason(delta.size, self.m, self.fragmentation(),
                                 self.rebuild_threshold, self.frag_budget)
         if reason is not None:
-            self._rebuild(reason)
+            with obs.span("snapshot.rebuild"):
+                self._rebuild(reason)
+            obs.inc("snapshot.rebuilds")
+            obs.inc(f"snapshot.rebuild.{reason.split(':')[0]}")
             stats.rebuilt, stats.rebuild_reason = True, reason
             stats.host_s = time.perf_counter() - t0
             return stats
 
         mig0 = self._pull.migrations + self._fwd.migrations
         try:
-            for u, v in zip(d_s.tolist(), d_d.tolist()):
-                self._pull.delete(v, u)
-                self._fwd.delete(u, v)
-            for u, v in zip(i_s.tolist(), i_d.tolist()):
-                self._pull.insert(v, u)
-                self._fwd.insert(u, v)
+            with obs.span("snapshot.host_edit"):
+                for u, v in zip(d_s.tolist(), d_d.tolist()):
+                    self._pull.delete(v, u)
+                    self._fwd.delete(u, v)
+                for u, v in zip(i_s.tolist(), i_d.tolist()):
+                    self._pull.insert(v, u)
+                    self._fwd.insert(u, v)
         except CapacityError as e:
             # mirrors are mid-edit but the key set is complete: rebuild from it
-            self._rebuild(f"capacity:{e}")
+            with obs.span("snapshot.rebuild"):
+                self._rebuild(f"capacity:{e}")
+            obs.inc("snapshot.rebuilds")
+            obs.inc("snapshot.rebuild.capacity")
             stats.rebuilt, stats.rebuild_reason = True, f"capacity:{e}"
             stats.host_s = time.perf_counter() - t0
             return stats
@@ -531,20 +546,25 @@ class DeviceSnapshot:
         stats.migrations = self._pull.migrations + self._fwd.migrations - mig0
         stats.host_s = time.perf_counter() - t0
         t1 = time.perf_counter()
-        rows_p, tiles_p = self._pull.device_refresh()
-        rows_f, tiles_f = self._fwd.device_refresh()
-        touched = np.unique(np.concatenate([d_s, d_d, i_s, i_d]))
-        if touched.size:
-            at = _pad_rows(touched.astype(np.int32),
-                           next_pow2(touched.size))
-            ja = jnp.asarray(at)
-            self._dev_outdeg = _scatter_1d(
-                self._dev_outdeg, ja,
-                jnp.asarray(self._outdeg[at].astype(np.int32)))
-            self._dev_indeg = _scatter_1d(
-                self._dev_indeg, ja,
-                jnp.asarray(self._indeg[at].astype(np.int32)))
+        with obs.span("snapshot.device_refresh", annotate=True):
+            rows_p, tiles_p = self._pull.device_refresh()
+            rows_f, tiles_f = self._fwd.device_refresh()
+            touched = np.unique(np.concatenate([d_s, d_d, i_s, i_d]))
+            if touched.size:
+                at = _pad_rows(touched.astype(np.int32),
+                               next_pow2(touched.size))
+                ja = jnp.asarray(at)
+                self._dev_outdeg = _scatter_1d(
+                    self._dev_outdeg, ja,
+                    jnp.asarray(self._outdeg[at].astype(np.int32)))
+                self._dev_indeg = _scatter_1d(
+                    self._dev_indeg, ja,
+                    jnp.asarray(self._indeg[at].astype(np.int32)))
         stats.rows_touched = rows_p + rows_f
         stats.tiles_touched = tiles_p + tiles_f
         stats.device_s = time.perf_counter() - t1
+        obs.inc("snapshot.inplace_batches")
+        obs.inc("snapshot.rows_touched", stats.rows_touched)
+        obs.inc("snapshot.tiles_touched", stats.tiles_touched)
+        obs.inc("snapshot.migrations", stats.migrations)
         return stats
