@@ -18,26 +18,26 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import device_graph, init_ranks, powerlaw_graph, pull_sum
-from repro.core.pagerank import update_ranks
+from repro.core.pagerank import PRParams, update_ranks
 from .common import emit, smoke, timeit
 
 N = 200_000
 M = 2_000_000
 
 
-def staged(dg, r, affected):
+def staged(dg, r, affected, params: PRParams = PRParams()):
     """Paper-style staged passes: contributions -> ranks -> delta -> flags."""
     d = dg.out_deg.astype(r.dtype)
     c = r / d
     s = pull_sum(dg, c)                                   # kernel pair
-    c0 = (1.0 - 0.85) / dg.n
-    rv = (c0 + 0.85 * (s - r / d)) / (1.0 - 0.85 / d)
+    c0 = (1.0 - params.alpha) / dg.n
+    rv = (c0 + params.alpha * (s - r / d)) / (1.0 - params.alpha / d)
     r_new = jnp.where(affected, rv, r)                    # update pass
     dr = jnp.abs(r_new - r)                               # norm pass 1
     delta = jnp.max(dr)                                   # norm pass 2
     rel = dr / jnp.maximum(r_new, r)                      # flag pass
-    aff = affected & ~(rel <= 1e-6)
-    dn = rel > 1e-6
+    aff = affected & ~(rel <= params.tau_p)
+    dn = rel > params.tau_f
     return r_new, aff, dn, delta
 
 
@@ -47,10 +47,12 @@ def run():
     dg = device_graph(g, d_p=64, tile=1024)
     r = init_ranks(g.n)
     aff = jnp.ones(g.n, jnp.bool_)
+    params = PRParams()
     fused_fn = jax.jit(lambda dg, r, a: update_ranks(
-        dg, r, a, alpha=0.85, tau_f=1e-6, tau_p=1e-6, prune=True,
-        closed_form=True, track_frontier=True))
-    staged_fn = jax.jit(staged)
+        dg, r, a, alpha=params.alpha, tau_f=params.tau_f,
+        tau_p=params.tau_p, prune=True, closed_form=True,
+        track_frontier=True))
+    staged_fn = jax.jit(lambda dg, r, a: staged(dg, r, a, params))
     tm_f, _ = timeit(fused_fn, dg, r, aff)
     tm_s, _ = timeit(staged_fn, dg, r, aff)
     t_f, t_s = tm_f.min_s, tm_s.min_s

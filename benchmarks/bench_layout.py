@@ -1,0 +1,80 @@
+"""Degree-bucketed ELL vs single-width hybrid layout (beyond paper).
+
+The paper's hybrid layout stores every low in-degree vertex at one ELL
+width d_p; on a power-law degree distribution most rows are far narrower
+than d_p, so most gathered slots are padding. The bucketed layout
+(core.graph.choose_bucket_widths) stores each row at the narrowest chosen
+width that fits it. This bench quantifies both sides of that trade on the
+same graph:
+
+  * slot accounting (`layout_slot_stats`): real edges vs gathered slots
+    per layout — the padded-edge efficiency the repro.obs `layout.*`
+    counters track;
+  * per-iteration wall time of the dense DF-P engine body
+    (`update_ranks`) on each layout — the time the saved gathers buy.
+
+Rows: ``layout/single-width-*`` (forced widths=(d_p,)) and
+``layout/bucketed-*`` (default build). The derived column carries the
+gathered-slot ratio; acceptance target is >= 2x fewer gathered slots on
+the power-law graph.
+"""
+from __future__ import annotations
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (build_hybrid, init_ranks, layout_slot_stats,
+                        powerlaw_graph, pull_sum, to_device)
+from repro.core.pagerank import update_ranks
+from .common import emit, smoke, timeit
+
+N = 200_000
+M = 2_000_000
+D_P = 64
+TILE = 1024
+
+
+def _iter_fn():
+    return jax.jit(lambda dg, r, a: update_ranks(
+        dg, r, a, alpha=0.85, tau_f=1e-6, tau_p=1e-6, prune=True,
+        closed_form=True, track_frontier=True))
+
+
+def run():
+    n, m = (20_000, 200_000) if smoke() else (N, M)
+    g = powerlaw_graph(n, m, seed=9)
+    lay_single = build_hybrid(g, d_p=D_P, tile=TILE, widths=(D_P,))
+    lay_bucket = build_hybrid(g, d_p=D_P, tile=TILE)
+    st_s = layout_slot_stats(lay_single)
+    st_b = layout_slot_stats(lay_bucket)
+    ratio = st_s["gathered_slots"] / max(st_b["gathered_slots"], 1)
+
+    r = init_ranks(g.n)
+    aff = jnp.ones(g.n, jnp.bool_)
+    pull = jax.jit(pull_sum)
+    step = _iter_fn()
+    results = {}
+    for tag, lay in (("single-width", lay_single), ("bucketed", lay_bucket)):
+        dg = to_device(lay)
+        c = r / dg.out_deg.astype(r.dtype)
+        tm_p, _ = timeit(pull, dg, c)
+        tm_i, _ = timeit(step, dg, r, aff)
+        results[tag] = (tm_p, tm_i)
+    st = {"single-width": st_s, "bucketed": st_b}
+    for tag in ("single-width", "bucketed"):
+        tm_p, tm_i = results[tag]
+        s = st[tag]
+        emit(f"layout/{tag}-pull", tm_p.min_s * 1e6,
+             f"gathered={s['gathered_slots']} real={s['real_edges']}",
+             timing=tm_p)
+        emit(f"layout/{tag}-iter", tm_i.min_s * 1e6,
+             f"slot_ratio={ratio:.2f}" if tag == "bucketed" else "rel=1.0",
+             timing=tm_i)
+
+
+if __name__ == "__main__":
+    run()

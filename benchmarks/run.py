@@ -5,6 +5,8 @@
   Fig. 4 / Fig. 5   -> bench_sweep      (random batch sweep: runtime + error)
   Fig. 1            -> bench_partition  (work-partitioning ablation)
   (beyond paper)    -> bench_fusion     (fused updateRanks accounting)
+  (beyond paper)    -> bench_layout     (bucketed vs single-width ELL:
+                       gathered-slot efficiency + per-iteration time)
   (beyond paper)    -> bench_stream     (incremental snapshot vs rebuild)
   (beyond paper)    -> bench_distributed (single vs 1-D vs 2-D sharded,
                        static + streamed DF-P; forced host mesh, subprocess)
@@ -46,11 +48,12 @@ def main(argv=None) -> int:
     common.reset_records()
 
     from . import (bench_static, bench_dynamic, bench_sweep, bench_partition,
-                   bench_fusion, bench_stream, bench_distributed)
+                   bench_fusion, bench_layout, bench_stream,
+                   bench_distributed)
     mods = {"static": bench_static, "dynamic": bench_dynamic,
             "sweep": bench_sweep, "partition": bench_partition,
-            "fusion": bench_fusion, "stream": bench_stream,
-            "distributed": bench_distributed}
+            "fusion": bench_fusion, "layout": bench_layout,
+            "stream": bench_stream, "distributed": bench_distributed}
     unknown = [k for k in args.keys if k not in mods]
     if unknown:
         ap.error(f"unknown bench keys {unknown}; choose from {list(mods)}")

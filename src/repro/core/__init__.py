@@ -1,14 +1,16 @@
 """Core library: the paper's contribution (Static + DF/DF-P PageRank) in JAX."""
-from .graph import (Graph, HybridLayout, HybridRows, BatchUpdate, build_graph,
-                    build_hybrid, build_hybrid_rows,
+from .graph import (Graph, HybridLayout, HybridRows, BatchUpdate, EllBucket,
+                    build_graph, build_hybrid, build_hybrid_rows,
+                    bucket_band_counts, choose_bucket_widths,
+                    layout_slot_stats,
                     apply_batch, random_graph, powerlaw_graph, random_batch,
                     temporal_stream, edge_keys, keys_to_edges,
                     ragged_positions, hybrid_caps, graph_from_sorted_keys)
 from .partition import partition_by_degree, partition_by_degree_jax
 from .rank_step import rank_step, rank_value, relative_change, teleport
-from .pagerank import (DeviceGraph, PRParams, to_device, device_graph,
-                       as_device_graph, init_ranks, pull_sum, pull_max,
-                       update_ranks, static_pagerank)
+from .pagerank import (DeviceGraph, EllBlock, PRParams, to_device,
+                       device_graph, as_device_graph, init_ranks, pull_sum,
+                       pull_max, update_ranks, static_pagerank)
 from .frontier import initial_affected, expand_affected, reach_affected
 from .dynamic import (DeviceBatch, batch_to_device, nd_pagerank, dt_pagerank,
                       df_pagerank, dfp_pagerank)
@@ -17,14 +19,16 @@ from .compact import (forward_device_graph, dfp_pagerank_compact,
 from .reference import reference_pagerank, numpy_pagerank, l1_error
 
 __all__ = [
-    "Graph", "HybridLayout", "HybridRows", "BatchUpdate", "build_graph",
-    "build_hybrid", "build_hybrid_rows",
+    "Graph", "HybridLayout", "HybridRows", "BatchUpdate", "EllBucket",
+    "build_graph", "build_hybrid", "build_hybrid_rows",
+    "bucket_band_counts", "choose_bucket_widths", "layout_slot_stats",
     "apply_batch", "random_graph", "powerlaw_graph", "random_batch",
     "temporal_stream", "edge_keys", "keys_to_edges", "ragged_positions",
     "hybrid_caps", "graph_from_sorted_keys",
     "partition_by_degree", "partition_by_degree_jax",
     "rank_step", "rank_value", "relative_change", "teleport",
     "DeviceGraph", "PRParams", "to_device", "device_graph", "as_device_graph",
+    "EllBlock",
     "init_ranks", "pull_sum", "pull_max", "update_ranks", "static_pagerank",
     "initial_affected", "expand_affected", "reach_affected",
     "DeviceBatch", "batch_to_device", "nd_pagerank", "dt_pagerank",

@@ -54,13 +54,25 @@ def _gather_pull(dg: DeviceGraph, c: jnp.ndarray, idx: jnp.ndarray,
                  tile_sel: jnp.ndarray) -> jnp.ndarray:
     """Pull contributions for the K vertices in `idx` only.
 
-    ELL side: gather K rows. High side: `tile_sel` is a compacted list of
-    tile ids whose owner vertex is affected; their sums are scattered into a
-    dense [n]-buffer (cheap: K_t · tile work, one write per tile)."""
+    ELL side: each compacted vertex's row lives in exactly one degree
+    bucket; gather K slots per bucket (dead lanes hit the cap sentinel and
+    read mask 0) and sum the per-bucket partials — every vertex picks up
+    its value from its own bucket, zeros elsewhere. High side: `tile_sel`
+    is a compacted list of tile ids whose owner vertex is affected; their
+    sums are scattered into a dense [n]-buffer (cheap: K_t · tile work,
+    one write per tile)."""
     dt = c.dtype
-    rows_idx = jnp.take(dg.ell_idx, idx, axis=0, mode="fill", fill_value=0)
-    rows_mask = jnp.take(dg.ell_mask, idx, axis=0, mode="fill", fill_value=0.0)
-    low = jnp.sum(jnp.take(c, rows_idx, axis=0) * rows_mask.astype(dt), axis=1)
+    nb = len(dg.buckets)
+    b_of = jnp.take(dg.bucket_of, idx, mode="fill", fill_value=nb)
+    s_of = jnp.take(dg.slot_of, idx, mode="fill", fill_value=0)
+    low = jnp.zeros(idx.shape, dt)
+    for bi, blk in enumerate(dg.buckets):
+        slot = jnp.where(b_of == bi, s_of, blk.rows.shape[0])
+        rows_idx = jnp.take(blk.idx, slot, axis=0, mode="fill", fill_value=0)
+        rows_mask = jnp.take(blk.mask, slot, axis=0, mode="fill",
+                             fill_value=0.0)
+        low = low + jnp.sum(jnp.take(c, rows_idx, axis=0)
+                            * rows_mask.astype(dt), axis=1)
 
     tiles = jnp.take(dg.hi_tiles, tile_sel, axis=0, mode="fill", fill_value=0)
     tmask = jnp.take(dg.hi_tmask, tile_sel, axis=0, mode="fill",
@@ -80,12 +92,16 @@ def _scatter_expand(fwd: DeviceGraph, dn_flags: jnp.ndarray, kn: int
     vertices get marked. Returns a dense bool [n] of newly-marked vertices."""
     n = fwd.n
     src = _compact(dn_flags, kn, n)
-    nbr = jnp.take(fwd.ell_idx, jnp.minimum(src, n - 1), axis=0)   # [kn,d_p]
-    msk = jnp.take(fwd.ell_mask, jnp.minimum(src, n - 1), axis=0) \
-        * (src < n)[:, None]
+    nb = len(fwd.buckets)
+    b_of = jnp.take(fwd.bucket_of, src, mode="fill", fill_value=nb)
+    s_of = jnp.take(fwd.slot_of, src, mode="fill", fill_value=0)
     out = jnp.zeros((n + 1,), jnp.bool_)
-    tgt = jnp.where(msk > 0, nbr, n)
-    out = out.at[tgt.reshape(-1)].set(True, mode="drop")
+    for bi, blk in enumerate(fwd.buckets):
+        slot = jnp.where(b_of == bi, s_of, blk.rows.shape[0])
+        nbr = jnp.take(blk.idx, slot, axis=0, mode="fill", fill_value=0)
+        msk = jnp.take(blk.mask, slot, axis=0, mode="fill", fill_value=0.0)
+        tgt = jnp.where(msk > 0, nbr, n)
+        out = out.at[tgt.reshape(-1)].set(True, mode="drop")
     # high-out-degree frontier vertices: walk their tile lists
     hi_aff = jnp.take(dn_flags, jnp.minimum(fwd.hi_ids, n - 1),
                       mode="fill", fill_value=False) & (fwd.hi_ids < n)

@@ -34,8 +34,9 @@ import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
 from .frontier import initial_affected
-from .graph import Graph, build_hybrid_rows, next_pow2
-from .pagerank import PRParams
+from .graph import (Graph, bucket_band_counts, build_hybrid_rows,
+                    choose_bucket_widths, next_pow2)
+from .pagerank import EllBlock, PRParams
 from .rank_step import rank_step
 from ..obs.trace import trace_init, trace_record
 
@@ -68,9 +69,14 @@ __all__ = ["ShardedGraph", "build_sharded", "sharded_caps", "sharded_need",
 
 
 class ShardedGraph(NamedTuple):
-    """Stacked per-shard hybrid layouts. Leading axis = shard."""
-    ell_idx: jnp.ndarray    # [nd, n_loc, d_p] int32, GLOBAL column ids
-    ell_mask: jnp.ndarray   # [nd, n_loc, d_p] f32
+    """Stacked per-shard hybrid layouts. Leading axis = shard.
+
+    Each ELL degree bucket is one `EllBlock` with stacked arrays: rows
+    [nd, cap_b] holds LOCAL row ids (sentinel n_loc), idx/mask
+    [nd, cap_b, w_b] hold GLOBAL column ids / validity. Bucket widths and
+    caps are shared across shards so stacking gives static shapes.
+    """
+    buckets: Tuple[EllBlock, ...]
     hi_pos: jnp.ndarray     # [nd, hi_cap] int32, LOCAL row ids (sentinel n_loc)
     hi_tiles: jnp.ndarray   # [nd, t_cap, tile] int32, GLOBAL column ids
     hi_tmask: jnp.ndarray   # [nd, t_cap, tile] f32
@@ -81,11 +87,11 @@ class ShardedGraph(NamedTuple):
 
     @property
     def nd(self) -> int:
-        return self.ell_idx.shape[0]
+        return self.out_deg.shape[0]
 
     @property
     def n_loc(self) -> int:
-        return self.ell_idx.shape[1]
+        return self.out_deg.shape[1]
 
 
 def shard_bounds(s: int, n_loc: int, n: int) -> Tuple[int, int]:
@@ -105,57 +111,87 @@ def shard_block_rows(g: Graph, s: int, n_loc: int):
     return off, dat
 
 
-def sharded_need(indeg: np.ndarray, nd: int, n_loc: int, d_p: int, tile: int
-                 ) -> Tuple[int, int]:
-    """Worst-shard (high-slot, tile) needs across the contiguous blocks —
-    the raw sizes the pow2 capacity ladder is applied to."""
+def sharded_need(indeg: np.ndarray, nd: int, n_loc: int, d_p: int, tile: int,
+                 widths: Tuple[int, ...] = (),
+                 band: bool = False) -> Tuple[int, int, Tuple[int, ...]]:
+    """Worst-shard (high-slot, tile, per-bucket-slot) needs across the
+    contiguous blocks — the raw sizes the pow2 capacity ladder is applied
+    to. Bucket needs include each shard's padding rows (degree 0, parked in
+    bucket 0 like `build_hybrid_rows` does). `band=True` counts each
+    bucket's streaming hysteresis band (`bucket_band_counts`) instead of
+    the initial placement census — what incremental snapshots must plan
+    capacity against."""
     n = int(indeg.shape[0])
     need_hi = need_t = 1
+    need_b = [1] * len(widths)
     for s in range(nd):
         lo, hi = shard_bounds(s, n_loc, n)
-        deg_hi = indeg[lo:hi][indeg[lo:hi] > d_p]
+        blk = indeg[lo:hi]
+        deg_hi = blk[blk > d_p]
         need_hi = max(need_hi, int(deg_hi.size))
         need_t = max(need_t, int(((deg_hi + tile - 1) // tile).sum()))
-    return need_hi, need_t
+        if widths:
+            if band:
+                cnt = list(bucket_band_counts(blk, widths, d_p))
+            else:
+                low = blk[blk <= d_p]
+                grp = np.searchsorted(widths, np.maximum(low, 1), side="left")
+                cnt = np.bincount(grp, minlength=len(widths))
+            cnt[0] += n_loc - (hi - lo)       # padding rows -> bucket 0
+            need_b = [max(a, int(b)) for a, b in zip(need_b, cnt)]
+    return need_hi, need_t, tuple(need_b)
 
 
 def build_sharded(g: Graph, nd: int, d_p: int = 64, tile: int = 1024,
-                  hi_cap: Optional[int] = None, t_cap: Optional[int] = None
+                  hi_cap: Optional[int] = None, t_cap: Optional[int] = None,
+                  widths: Optional[Tuple[int, ...]] = None,
+                  bucket_caps: Optional[Tuple[int, ...]] = None
                   ) -> ShardedGraph:
     """Host-side partitioner: contiguous vertex blocks, one hybrid per shard.
 
     Pads |V| to a multiple of nd with isolated vertices (masked out of
     updates and results). Each shard's block is laid out by the shared
-    `build_hybrid_rows` primitive — the same vectorized two-pass fill as the
-    single-device `build_hybrid`, no per-vertex Python loops. Per-shard
-    high/tile capacities are shared across shards so stacking gives static
-    shapes, and default to pow2 of the max per-shard need (never pass
-    smaller values than a previous build when re-sharding a growing graph —
-    `sharded_caps` extracts the current signature).
+    `build_hybrid_rows` primitive — the same vectorized ragged-fill passes
+    as the single-device `build_hybrid`, no per-vertex Python loops. Bucket
+    widths come from the *global* degree histogram so every shard shares
+    one bucket structure; per-shard bucket/high/tile capacities are shared
+    across shards so stacking gives static shapes, and default to pow2 of
+    the max per-shard need (never pass smaller values than a previous build
+    when re-sharding a growing graph — `sharded_caps` extracts the current
+    signature).
     """
     n = g.n
     n_pad = ((n + nd - 1) // nd) * nd
     n_loc = n_pad // nd
     indeg = g.in_degree()
     out_deg = g.out_degree()
+    if widths is None:
+        widths = choose_bucket_widths(indeg, d_p)
+    widths = tuple(int(w) for w in widths)
 
     # capacity discipline (DeviceSnapshot's pow2/never-shrink ladder): size
     # for the worst shard so the stacked shapes are jit-stable across shards
     # and, when the caller threads caps through batches, across snapshots.
-    need_hi, need_t = sharded_need(indeg, nd, n_loc, d_p, tile)
+    need_hi, need_t, need_b = sharded_need(indeg, nd, n_loc, d_p, tile,
+                                           widths)
     if hi_cap is None:
         hi_cap = next_pow2(need_hi, 8)
     if t_cap is None:
         t_cap = next_pow2(need_t, 8)
+    if bucket_caps is None:
+        bucket_caps = tuple(next_pow2(nb, 8) for nb in need_b)
     assert need_hi <= hi_cap and need_t <= t_cap, \
         "sharded caps too small for this snapshot"
+    assert all(nb <= c for nb, c in zip(need_b, bucket_caps)), \
+        "sharded bucket caps too small for this snapshot"
 
     pieces = []
     for s in range(nd):
         off, dat = shard_block_rows(g, s, n_loc)
         pieces.append(build_hybrid_rows(off, dat, d_p=d_p, tile=tile,
                                         n_rows=n_loc, n_hi_cap=hi_cap,
-                                        t_cap=t_cap))
+                                        t_cap=t_cap, widths=widths,
+                                        bucket_caps=bucket_caps))
 
     deg = np.ones((nd, n_loc), np.int32)
     valid = np.zeros((nd, n_loc), bool)
@@ -164,9 +200,14 @@ def build_sharded(g: Graph, nd: int, d_p: int = 64, tile: int = 1024,
         deg[s, :hi - lo] = out_deg[lo:hi]
         valid[s, :hi - lo] = True
 
+    buckets = tuple(
+        EllBlock(
+            rows=jnp.asarray(np.stack([p.buckets[b].rows for p in pieces])),
+            idx=jnp.asarray(np.stack([p.buckets[b].idx for p in pieces])),
+            mask=jnp.asarray(np.stack([p.buckets[b].mask for p in pieces])))
+        for b in range(len(widths)))
     return ShardedGraph(
-        ell_idx=jnp.asarray(np.stack([p.ell_idx for p in pieces])),
-        ell_mask=jnp.asarray(np.stack([p.ell_mask for p in pieces])),
+        buckets=buckets,
         hi_pos=jnp.asarray(np.stack([p.hi_ids for p in pieces])),
         hi_tiles=jnp.asarray(np.stack([p.hi_tiles for p in pieces])),
         hi_tmask=jnp.asarray(np.stack([p.hi_tmask for p in pieces])),
@@ -177,8 +218,12 @@ def build_sharded(g: Graph, nd: int, d_p: int = 64, tile: int = 1024,
 def sharded_caps(sg: ShardedGraph) -> dict:
     """Capacity signature — pass as **caps to `build_sharded` to rebuild a
     later snapshot of the same graph with identical device shapes."""
-    return dict(d_p=int(sg.ell_idx.shape[2]), tile=int(sg.hi_tiles.shape[2]),
-                hi_cap=int(sg.hi_pos.shape[1]), t_cap=int(sg.hi_tiles.shape[1]))
+    widths = tuple(int(b.idx.shape[2]) for b in sg.buckets)
+    return dict(d_p=widths[-1] if widths else 0,
+                tile=int(sg.hi_tiles.shape[2]),
+                hi_cap=int(sg.hi_pos.shape[1]), t_cap=int(sg.hi_tiles.shape[1]),
+                widths=widths,
+                bucket_caps=tuple(int(b.rows.shape[1]) for b in sg.buckets))
 
 
 # ---------------------------------------------------------------------------
@@ -226,9 +271,12 @@ def initial_affected_sharded(nd: int, n_loc: int, batch
 
 def _local_pull(sg_loc, c_full: jnp.ndarray) -> jnp.ndarray:
     dt = c_full.dtype
-    ell_idx, ell_mask = sg_loc["ell_idx"], sg_loc["ell_mask"]
-    low = jnp.sum(jnp.take(c_full, ell_idx, axis=0) * ell_mask.astype(dt),
-                  axis=1)
+    n_loc = sg_loc["out_deg"].shape[0]
+    low = jnp.zeros((n_loc,), dt)
+    for blk in sg_loc["buckets"]:
+        sums = jnp.sum(jnp.take(c_full, blk.idx, axis=0)
+                       * blk.mask.astype(dt), axis=1)
+        low = low.at[blk.rows].add(sums, mode="drop")
     tile_sums = jnp.sum(jnp.take(c_full, sg_loc["hi_tiles"], axis=0)
                         * sg_loc["hi_tmask"].astype(dt), axis=1)
     hi_cap = sg_loc["hi_pos"].shape[0]
@@ -239,18 +287,21 @@ def _local_pull(sg_loc, c_full: jnp.ndarray) -> jnp.ndarray:
 
 def _local_pull_max(sg_loc, x_full: jnp.ndarray) -> jnp.ndarray:
     dt = x_full.dtype
-    low = jnp.max(jnp.take(x_full, sg_loc["ell_idx"], axis=0)
-                  * sg_loc["ell_mask"].astype(dt), axis=1)
+    n_loc = sg_loc["out_deg"].shape[0]
+    low = jnp.zeros((n_loc,), dt)
+    for blk in sg_loc["buckets"]:
+        rmax = jnp.max(jnp.take(x_full, blk.idx, axis=0)
+                       * blk.mask.astype(dt), axis=1, initial=0)
+        low = low.at[blk.rows].max(rmax, mode="drop")
     tmax = jnp.max(jnp.take(x_full, sg_loc["hi_tiles"], axis=0)
-                   * sg_loc["hi_tmask"].astype(dt), axis=1)
+                   * sg_loc["hi_tmask"].astype(dt), axis=1, initial=0)
     hi_cap = sg_loc["hi_pos"].shape[0]
     per_slot = jnp.maximum(
         jax.ops.segment_max(tmax, sg_loc["hi_rowmap"], num_segments=hi_cap), 0)
-    return jnp.maximum(low, jnp.zeros_like(low).at[sg_loc["hi_pos"]]
-                       .max(per_slot, mode="drop"))
+    return low.at[sg_loc["hi_pos"]].max(per_slot, mode="drop")
 
 
-_FIELDS = ("ell_idx", "ell_mask", "hi_pos", "hi_tiles", "hi_tmask",
+_FIELDS = ("buckets", "hi_pos", "hi_tiles", "hi_tmask",
            "hi_rowmap", "out_deg", "valid")
 
 
@@ -259,8 +310,8 @@ def _as_dict(sg: ShardedGraph) -> dict:
 
 
 def _squeeze_shard(sgd: dict) -> dict:
-    """Inside shard_map each field has leading dim 1 — drop it."""
-    return {k: v[0] for k, v in sgd.items()}
+    """Inside shard_map each array has leading dim 1 — drop it."""
+    return jax.tree.map(lambda v: v[0], sgd)
 
 
 def _make_loop(axis, params: PRParams, n_true: int, *, dfp: bool,

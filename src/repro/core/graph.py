@@ -23,6 +23,7 @@ import numpy as np
 
 __all__ = [
     "Graph",
+    "EllBucket",
     "HybridLayout",
     "HybridRows",
     "BatchUpdate",
@@ -37,8 +38,12 @@ __all__ = [
     "keys_to_edges",
     "next_pow2",
     "ragged_positions",
+    "bucket_band_counts",
+    "choose_bucket_widths",
     "build_hybrid_rows",
+    "build_hybrid",
     "hybrid_caps",
+    "layout_slot_stats",
     "graph_from_sorted_keys",
 ]
 
@@ -206,18 +211,115 @@ def apply_batch(g: Graph, batch: BatchUpdate) -> Graph:
 
 
 # ---------------------------------------------------------------------------
-# Hybrid ELL + tiled-CSR device layout (the paper's two-kernel partition)
+# Hybrid degree-bucketed ELL + tiled-CSR device layout (the paper's
+# degree-partitioned kernels, generalized to a multi-bucket low side)
 # ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class EllBucket:
+    """One dense ELL block of the low side: rows whose degree fits `width`.
+
+    rows [cap] int32 : row id per slot (sentinel = n_rows for unused slots)
+    idx  [cap, width] int32 : neighbor ids, padded with 0
+    mask [cap, width] f32   : 1.0 for real edges, 0.0 for padding
+    """
+
+    width: int
+    rows: np.ndarray
+    idx: np.ndarray
+    mask: np.ndarray
+
+    @property
+    def cap(self) -> int:
+        return int(self.rows.shape[0])
+
+
+def choose_bucket_widths(deg: np.ndarray, d_p: int,
+                         max_buckets: int = 4) -> Tuple[int, ...]:
+    """Pick ELL bucket widths from the degree histogram (Gunrock-style
+    multi-bucket load balancing, arXiv:1701.01170).
+
+    Candidates are the powers of two below `d_p` plus `d_p` itself; a small
+    exact DP picks the subset (always containing `d_p`, at most
+    `max_buckets`) that minimizes total ELL slots when every row of degree
+    <= d_p is stored at the smallest chosen width that fits it. Ties prefer
+    fewer buckets. `d_p <= 0` means no ELL side at all -> ().
+    """
+    if d_p <= 0:
+        return ()
+    ladder = []
+    w = 1
+    while w < d_p:
+        ladder.append(w)
+        w <<= 1
+    ladder.append(d_p)
+    deg = np.asarray(deg, np.int64)
+    low_deg = deg[deg <= d_p]
+    if low_deg.size == 0:
+        return (d_p,)
+    grp = np.searchsorted(ladder, np.maximum(low_deg, 1), side="left")
+    counts = np.bincount(grp, minlength=len(ladder)).astype(np.int64)
+    pre = np.concatenate([[0], np.cumsum(counts)])
+    k = len(ladder)
+    inf = float("inf")
+    best = [[inf] * (max_buckets + 1) for _ in range(k)]
+    back = [[None] * (max_buckets + 1) for _ in range(k)]
+    for i in range(k):
+        best[i][1] = ladder[i] * int(pre[i + 1])
+        for j in range(2, max_buckets + 1):
+            for p in range(i):
+                cost = best[p][j - 1] + ladder[i] * int(pre[i + 1] - pre[p + 1])
+                if cost < best[i][j]:
+                    best[i][j] = cost
+                    back[i][j] = p
+    bj, bcost = 1, best[k - 1][1]
+    for j in range(2, max_buckets + 1):
+        if best[k - 1][j] < bcost:
+            bcost = best[k - 1][j]
+            bj = j
+    sel = [k - 1]
+    i, j = k - 1, bj
+    while j > 1:
+        i = back[i][j]
+        sel.append(i)
+        j -= 1
+    return tuple(ladder[i] for i in sorted(sel))
+
+
+def bucket_band_counts(deg: np.ndarray, widths: Tuple[int, ...],
+                       d_p: int) -> Tuple[int, ...]:
+    """Rows each bucket can hold under the streaming hysteresis.
+
+    Bucket b's occupancy band is (widths[b-1]//2, widths[b]] — a row
+    demotes out of b only once its degree drops to half the *narrower*
+    width, so every degree in that band may legally sit in b (bucket 0's
+    band is [0, widths[0]]). Bands of adjacent buckets overlap, so these
+    are per-bucket upper bounds, not a partition: streaming capacity
+    planning must use them instead of the initial placement counts, or
+    migration drift exhausts a bucket that the placement census said was
+    big enough.
+    """
+    deg = np.asarray(deg, np.int64)
+    low = deg[deg <= d_p]
+    out = []
+    for bi, w in enumerate(widths):
+        if bi == 0:
+            out.append(int((low <= w).sum()))
+        else:
+            floor = widths[bi - 1] // 2
+            out.append(int(((low > floor) & (low <= w)).sum()))
+    return tuple(out)
+
 
 @dataclasses.dataclass(frozen=True)
 class HybridLayout:
     """Device-friendly pull layout for the transpose graph G'.
 
-    ELL side (low in-degree, deg <= d_p):
-      ell_idx  [n, d_p] int32 : in-neighbor ids, padded with 0
-      ell_mask [n, d_p] f32   : 1.0 for real edges, 0.0 for padding
-      (rows of high-degree vertices are all-padding; they are masked out by
-       `is_low` so storage is wasted but shapes stay static across snapshots)
+    Low side (in-degree <= d_p): degree buckets — `buckets[b]` is a dense
+    `[cap_b, widths[b]]` ELL block holding every row whose degree fits
+    `widths[b]` but not `widths[b-1]`, with its own row-id map (see
+    `EllBucket`). `bucket_of[v]` gives the bucket index (== len(widths)
+    for CSR-side rows) and `slot_of[v]` the row's slot within its side.
     CSR side (high in-degree), tile-padded to `tile` edges:
       hi_ids    [n_hi_cap]      int32 : vertex id per high vertex (pad = n)
       hi_tiles  [t_cap, tile]   int32 : in-neighbor ids, tiles padded with 0
@@ -231,8 +333,10 @@ class HybridLayout:
 
     d_p: int
     tile: int
-    ell_idx: np.ndarray
-    ell_mask: np.ndarray
+    widths: Tuple[int, ...]
+    buckets: Tuple[EllBucket, ...]
+    bucket_of: np.ndarray
+    slot_of: np.ndarray
     hi_ids: np.ndarray
     hi_tiles: np.ndarray
     hi_tmask: np.ndarray
@@ -253,21 +357,24 @@ class HybridLayout:
 
 @dataclasses.dataclass(frozen=True)
 class HybridRows:
-    """Hybrid ELL + tiled-CSR layout of `n_rows` ragged rows — one
+    """Hybrid bucketed-ELL + tiled-CSR layout of `n_rows` ragged rows — one
     orientation, no graph semantics attached.
 
     This is the layout *primitive* both scales share: `build_hybrid` wraps it
     for the single-device full graph (row = vertex, ids = global), and
     `core.distributed.build_sharded` stacks one per shard (row = local
     vertex, stored ids = global column ids). Field conventions match
-    `HybridLayout`: `hi_ids` holds row ids with sentinel `n_rows` for unused
-    slots, `hi_rowmap` points pad tiles at slot `n_hi_cap - 1` (mask 0).
+    `HybridLayout`: bucket `rows` and `hi_ids` hold row ids with sentinel
+    `n_rows` for unused slots, `hi_rowmap` points pad tiles at slot
+    `n_hi_cap - 1` (mask 0).
     """
 
     d_p: int
     tile: int
-    ell_idx: np.ndarray     # [n_rows, d_p] int32
-    ell_mask: np.ndarray    # [n_rows, d_p] f32
+    widths: Tuple[int, ...]
+    buckets: Tuple[EllBucket, ...]
+    bucket_of: np.ndarray   # [n_rows] int32 (len(widths) = CSR side / none)
+    slot_of: np.ndarray     # [n_rows] int32 (slot within bucket or hi side)
     hi_ids: np.ndarray      # [n_hi_cap]    int32 (sentinel = n_rows)
     hi_tiles: np.ndarray    # [t_cap, tile] int32
     hi_tmask: np.ndarray    # [t_cap, tile] f32
@@ -288,16 +395,21 @@ def build_hybrid_rows(offsets: np.ndarray, data: np.ndarray,
                       d_p: int = 64, tile: int = 1024,
                       n_rows: Optional[int] = None,
                       n_hi_cap: Optional[int] = None,
-                      t_cap: Optional[int] = None) -> HybridRows:
+                      t_cap: Optional[int] = None,
+                      widths: Optional[Tuple[int, ...]] = None,
+                      bucket_caps: Optional[Tuple[int, ...]] = None
+                      ) -> HybridRows:
     """Vectorized hybrid layout of ragged rows (the shared Alg. 4 split).
 
     `offsets` [k+1] / `data` [offsets[-1]] describe k ragged rows; `n_rows`
     (>= k, default k) pads trailing empty rows so callers can present a
     fixed row capacity (sharded blocks pad |V| to a multiple of the shard
-    count). Rows with more than `d_p` entries go to the tiled-CSR side.
-    `n_hi_cap` / `t_cap` fix the high-side capacities so repeated builds
-    keep identical device shapes; they default to the exact current sizes.
-    Two vectorized ragged-fill passes — no per-row Python loop.
+    count). Rows with more than `d_p` entries go to the tiled-CSR side;
+    rows with <= d_p entries go to the ELL bucket of the smallest width
+    that fits them. `widths` defaults to `choose_bucket_widths` over the
+    degree histogram; `bucket_caps` / `n_hi_cap` / `t_cap` fix capacities
+    so repeated builds keep identical device shapes (default: exact current
+    sizes). Vectorized ragged-fill passes — no per-row Python loop.
     """
     offsets = np.asarray(offsets, np.int64)
     data = np.asarray(data, np.int32)
@@ -309,17 +421,43 @@ def build_hybrid_rows(offsets: np.ndarray, data: np.ndarray,
     deg[:k] = np.diff(offsets)
     is_low = deg <= d_p
 
-    # --- ELL side (one vectorized ragged-fill pass) ------------------------
-    ell_idx = np.zeros((n_rows, d_p), dtype=np.int32)
-    ell_mask = np.zeros((n_rows, d_p), dtype=np.float32)
-    low = np.nonzero(is_low[:k])[0]   # rows >= k are empty, nothing to fill
-    if low.size:
-        deg_low = deg[low]
-        rows = np.repeat(low, deg_low)
-        pos = ragged_positions(deg_low)
-        src_at = np.repeat(offsets[low], deg_low) + pos
-        ell_idx[rows, pos] = data[src_at]
-        ell_mask[rows, pos] = 1.0
+    if widths is None:
+        widths = choose_bucket_widths(deg[:k], d_p)
+    widths = tuple(int(w) for w in widths)
+    assert list(widths) == sorted(set(widths)), "widths must be ascending"
+    if widths:
+        assert widths[-1] == d_p, "top bucket width must equal d_p"
+    else:
+        assert d_p <= 0, "d_p > 0 requires at least one ELL bucket"
+    n_buckets = len(widths)
+
+    # --- ELL buckets (one vectorized ragged-fill pass per bucket) ----------
+    bucket_of = np.full(n_rows, n_buckets, dtype=np.int32)
+    slot_of = np.zeros(n_rows, dtype=np.int32)
+    if n_buckets:
+        low_rows = np.nonzero(is_low)[0]
+        bucket_of[low_rows] = np.searchsorted(
+            widths, np.maximum(deg[low_rows], 1), side="left")
+    buckets = []
+    for bi, w in enumerate(widths):
+        rows_b = np.nonzero(bucket_of == bi)[0]
+        cnt = int(rows_b.size)
+        cap = max(cnt, 1) if bucket_caps is None else int(bucket_caps[bi])
+        assert cnt <= cap, f"bucket_caps[{bi}] too small for this snapshot"
+        rows_arr = np.full(cap, n_rows, dtype=np.int32)
+        rows_arr[:cnt] = rows_b
+        idx = np.zeros((cap, w), dtype=np.int32)
+        mask = np.zeros((cap, w), dtype=np.float32)
+        slot_of[rows_b] = np.arange(cnt, dtype=np.int32)
+        real = rows_b[rows_b < k]     # rows >= k are empty, nothing to fill
+        if real.size:
+            deg_r = deg[real]
+            rr = np.repeat(slot_of[real], deg_r)
+            pos = ragged_positions(deg_r)
+            src_at = np.repeat(offsets[real], deg_r) + pos
+            idx[rr, pos] = data[src_at]
+            mask[rr, pos] = 1.0
+        buckets.append(EllBucket(width=w, rows=rows_arr, idx=idx, mask=mask))
 
     # --- tiled CSR side (single scatter; no per-row Python loop) -----------
     hi = np.nonzero(~is_low)[0].astype(np.int32)
@@ -349,40 +487,81 @@ def build_hybrid_rows(offsets: np.ndarray, data: np.ndarray,
             np.arange(n_hi, dtype=np.int32), nt_per)
     hi_ids = np.full(n_hi_cap, n_rows, dtype=np.int32)  # sentinel = "no row"
     hi_ids[:n_hi] = hi
+    slot_of[hi] = np.arange(n_hi, dtype=np.int32)
 
-    return HybridRows(d_p=d_p, tile=tile, ell_idx=ell_idx, ell_mask=ell_mask,
-                      hi_ids=hi_ids, hi_tiles=hi_tiles, hi_tmask=hi_tmask,
-                      hi_rowmap=hi_rowmap, is_low=is_low, row_deg=deg)
+    hr = HybridRows(d_p=d_p, tile=tile, widths=widths, buckets=tuple(buckets),
+                    bucket_of=bucket_of, slot_of=slot_of,
+                    hi_ids=hi_ids, hi_tiles=hi_tiles, hi_tmask=hi_tmask,
+                    hi_rowmap=hi_rowmap, is_low=is_low, row_deg=deg)
+    _count_layout(hr)
+    return hr
 
 
 def build_hybrid(g: Graph, d_p: int = 64, tile: int = 1024,
                  n_hi_cap: Optional[int] = None,
-                 t_cap: Optional[int] = None) -> HybridLayout:
+                 t_cap: Optional[int] = None,
+                 widths: Optional[Tuple[int, ...]] = None,
+                 bucket_caps: Optional[Tuple[int, ...]] = None
+                 ) -> HybridLayout:
     """Partition vertices by in-degree (Alg. 4) and build the hybrid layout.
 
     A thin graph-aware wrapper over `build_hybrid_rows` (rows = in-neighbor
-    lists of the transpose CSR). `n_hi_cap` / `t_cap` allow fixed capacities
-    across dynamic snapshots so the jitted update never recompiles; they
-    default to the exact current sizes.
+    lists of the transpose CSR). `widths` defaults to the degree-histogram
+    bucket choice; `bucket_caps` / `n_hi_cap` / `t_cap` allow fixed
+    capacities across dynamic snapshots so the jitted update never
+    recompiles; they default to the exact current sizes.
     """
     from .partition import partition_by_degree
 
     indeg = g.in_degree()
     perm, n_low = partition_by_degree(indeg, d_p)
     hr = build_hybrid_rows(g.t_offsets, g.t_sources, d_p=d_p, tile=tile,
-                           n_hi_cap=n_hi_cap, t_cap=t_cap)
+                           n_hi_cap=n_hi_cap, t_cap=t_cap,
+                           widths=widths, bucket_caps=bucket_caps)
     return HybridLayout(
-        d_p=d_p, tile=tile, ell_idx=hr.ell_idx, ell_mask=hr.ell_mask,
+        d_p=d_p, tile=tile, widths=hr.widths, buckets=hr.buckets,
+        bucket_of=hr.bucket_of, slot_of=hr.slot_of,
         hi_ids=hr.hi_ids, hi_tiles=hr.hi_tiles, hi_tmask=hr.hi_tmask,
         hi_rowmap=hr.hi_rowmap, is_low=hr.is_low, out_deg=g.out_degree(),
         perm=perm, n_low=int(n_low))
 
 
-def hybrid_caps(lay: HybridLayout) -> dict:
+def hybrid_caps(lay) -> dict:
     """Capacity signature of a layout — pass as **caps to `build_hybrid` to
     rebuild a later snapshot with identical device shapes (no recompiles)."""
     return dict(d_p=lay.d_p, tile=lay.tile, n_hi_cap=lay.n_hi_cap,
-                t_cap=int(lay.hi_tiles.shape[0]))
+                t_cap=int(lay.hi_tiles.shape[0]), widths=lay.widths,
+                bucket_caps=tuple(b.cap for b in lay.buckets))
+
+
+def layout_slot_stats(lay) -> dict:
+    """Edge-slot efficiency of a layout: how many slots one full pull
+    gathers vs how many real edges it carries (padded-edge accounting).
+
+    Works on HybridRows / HybridLayout. `ell_slots` counts every bucket's
+    `cap * width`; `hi_slots` counts `t_cap * tile`; `real_edges` counts
+    mask bits actually set. `gathered_slots / real_edges` is the padding
+    overhead one iteration pays.
+    """
+    ell_slots = sum(b.cap * b.width for b in lay.buckets)
+    hi_slots = int(lay.hi_tiles.shape[0] * lay.hi_tiles.shape[1])
+    real = int(sum(int(b.mask.sum()) for b in lay.buckets)
+               + int(lay.hi_tmask.sum()))
+    return dict(real_edges=real, ell_slots=ell_slots, hi_slots=hi_slots,
+                gathered_slots=ell_slots + hi_slots)
+
+
+def _count_layout(hr: HybridRows) -> None:
+    """Record padded-edge-efficiency counters for each layout build."""
+    from ..obs import get_registry
+
+    st = layout_slot_stats(hr)
+    reg = get_registry()
+    reg.inc("layout.builds")
+    reg.inc("layout.real_edges", st["real_edges"])
+    reg.inc("layout.ell_slots", st["ell_slots"])
+    reg.inc("layout.hi_slots", st["hi_slots"])
+    reg.inc("layout.gathered_slots", st["gathered_slots"])
 
 
 # ---------------------------------------------------------------------------

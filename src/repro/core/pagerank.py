@@ -24,8 +24,8 @@ from .rank_step import rank_step
 from ..obs.trace import trace_init, trace_record
 
 __all__ = [
-    "DeviceGraph", "to_device", "as_device_graph", "pull_sum", "pull_max",
-    "update_ranks", "static_pagerank", "PRParams", "init_ranks",
+    "EllBlock", "DeviceGraph", "to_device", "as_device_graph", "pull_sum",
+    "pull_max", "update_ranks", "static_pagerank", "PRParams", "init_ranks",
 ]
 
 ALPHA = 0.85
@@ -35,10 +35,23 @@ TAU_P = 1e-6
 MAX_ITER = 500
 
 
+class EllBlock(NamedTuple):
+    """One degree bucket of the low side, staged on device."""
+    rows: jnp.ndarray       # [cap_b] int32 (sentinel = n)
+    idx: jnp.ndarray        # [cap_b, w_b] int32
+    mask: jnp.ndarray       # [cap_b, w_b] f32
+
+    @property
+    def width(self) -> int:
+        return self.idx.shape[1]
+
+
 class DeviceGraph(NamedTuple):
-    """Hybrid pull layout staged on device (all jnp arrays, static shapes)."""
-    ell_idx: jnp.ndarray    # [n, d_p] int32
-    ell_mask: jnp.ndarray   # [n, d_p] f32
+    """Hybrid bucketed pull layout staged on device (all jnp arrays,
+    static shapes; the bucket tuple is static pytree structure)."""
+    buckets: Tuple[EllBlock, ...]   # degree buckets, ascending width
+    bucket_of: jnp.ndarray  # [n] int32 (len(buckets) = CSR side)
+    slot_of: jnp.ndarray    # [n] int32 (slot within bucket / hi side)
     hi_ids: jnp.ndarray     # [n_hi_cap] int32 (sentinel = n)
     hi_tiles: jnp.ndarray   # [t_cap, tile] int32
     hi_tmask: jnp.ndarray   # [t_cap, tile] f32
@@ -65,8 +78,12 @@ class PRParams(NamedTuple):
 
 def to_device(layout: HybridLayout) -> DeviceGraph:
     return DeviceGraph(
-        ell_idx=jnp.asarray(layout.ell_idx),
-        ell_mask=jnp.asarray(layout.ell_mask),
+        buckets=tuple(EllBlock(rows=jnp.asarray(b.rows),
+                               idx=jnp.asarray(b.idx),
+                               mask=jnp.asarray(b.mask))
+                      for b in layout.buckets),
+        bucket_of=jnp.asarray(layout.bucket_of),
+        slot_of=jnp.asarray(layout.slot_of),
         hi_ids=jnp.asarray(layout.hi_ids),
         hi_tiles=jnp.asarray(layout.hi_tiles),
         hi_tmask=jnp.asarray(layout.hi_tmask),
@@ -112,17 +129,22 @@ def init_ranks(n: int, dtype=jnp.float64) -> jnp.ndarray:
 def pull_sum(dg: DeviceGraph, c: jnp.ndarray) -> jnp.ndarray:
     """sum_{u in G'.row(v)} c[u] for every v — the paper's two rank kernels.
 
-    ELL side: [n, d_p] masked gather + row-sum (lane-per-vertex).
-    CSR side: [t_cap, tile] masked gather + tile-sum + segment-sum over the
-    tile->row map (tile-loop-per-vertex with an on-chip accumulator on TPU),
-    scattered once into the dense result (drop-mode handles pad sentinel).
+    ELL side: per degree bucket, [cap_b, w_b] masked gather + row-sum
+    (lane-per-vertex at the bucket's width), scattered once through the
+    bucket's row map. CSR side: [t_cap, tile] masked gather + tile-sum +
+    segment-sum over the tile->row map (tile-loop-per-vertex with an
+    on-chip accumulator on TPU), scattered once into the dense result
+    (drop-mode handles pad sentinels on both sides).
     """
     dt = c.dtype
-    low = jnp.sum(jnp.take(c, dg.ell_idx, axis=0) * dg.ell_mask.astype(dt), axis=1)
+    out = jnp.zeros(c.shape, dt)
+    for blk in dg.buckets:
+        sums = jnp.sum(jnp.take(c, blk.idx, axis=0) * blk.mask.astype(dt),
+                       axis=1)
+        out = out.at[blk.rows].add(sums, mode="drop")
     tile_sums = jnp.sum(jnp.take(c, dg.hi_tiles, axis=0) * dg.hi_tmask.astype(dt), axis=1)
     hi_per_slot = jax.ops.segment_sum(tile_sums, dg.hi_rowmap,
                                       num_segments=dg.n_hi_cap)
-    out = low  # high-degree ELL rows are all-padding => contribute 0 here
     out = out.at[dg.hi_ids].add(hi_per_slot, mode="drop")
     return out
 
@@ -134,15 +156,18 @@ def pull_max(dg: DeviceGraph, x: jnp.ndarray) -> jnp.ndarray:
     cheap scatter); same fixpoint, same schedule, scatter-free.
     """
     dt = x.dtype
-    low = jnp.max(jnp.take(x, dg.ell_idx, axis=0) * dg.ell_mask.astype(dt),
-                  axis=1, initial=0)   # initial: d_p may be 0 ("one format")
+    out = jnp.zeros(x.shape, dt)
+    for blk in dg.buckets:
+        rmax = jnp.max(jnp.take(x, blk.idx, axis=0) * blk.mask.astype(dt),
+                       axis=1, initial=0)
+        out = out.at[blk.rows].max(rmax, mode="drop")
     tile_max = jnp.max(jnp.take(x, dg.hi_tiles, axis=0)
                        * dg.hi_tmask.astype(dt), axis=1, initial=0)
     hi_per_slot = jax.ops.segment_max(tile_max, dg.hi_rowmap,
                                       num_segments=dg.n_hi_cap)
     hi_per_slot = jnp.maximum(hi_per_slot, 0)  # empty segments -> -inf guard
-    out = jnp.zeros_like(low).at[dg.hi_ids].max(hi_per_slot, mode="drop")
-    return jnp.maximum(low, out)
+    out = out.at[dg.hi_ids].max(hi_per_slot, mode="drop")
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -185,8 +210,8 @@ def static_pagerank(dg, r0: jnp.ndarray, params: PRParams = PRParams(),
 
     `dg` may be a DeviceGraph or any pre-staged snapshot (see as_device_graph).
     """
-    return _static_pagerank(as_device_graph(dg), r0, params, pull_sum_fn,
-                            trace)
+    return _static_pagerank(as_device_graph(dg), jnp.asarray(r0), params,
+                            pull_sum_fn, trace)
 
 
 @functools.partial(jax.jit, static_argnames=("params", "pull_sum_fn",
@@ -213,7 +238,6 @@ def _static_pagerank(dg: DeviceGraph, r0: jnp.ndarray,
         _, delta, i, _ = state
         return (delta > params.tau) & (i < params.max_iter)
 
-    r0 = r0.astype(r0.dtype)
     tb0 = trace_init(params.max_iter, r0.dtype, "static") if trace else zero
     init = (r0, jnp.asarray(jnp.inf, r0.dtype), zero, tb0)
     r, _, iters, tb = jax.lax.while_loop(cond, body, init)

@@ -3,14 +3,17 @@
 Each kernel ships with a pure-jnp oracle in ref.py; tests sweep shapes and
 dtypes in interpret mode (this container is CPU-only; TPU is the target).
 """
+from .common import default_interpret
 from .ell_pull import ell_pull
+from .ell_bucket_pull import ell_bucket_pull, fused_ell_update
 from .csr_block import csr_block_pull
 from .pr_update import pr_update
 from .linf_delta import linf_delta
 from .flash_attn import flash_attention
-from .ops import pull_sum_kernels, update_ranks_kernel, default_interpret
+from .ops import pull_sum_kernels, update_ranks_kernel
 from .stream_scatter import scatter_rows, ell_scatter_rows
 
-__all__ = ["ell_pull", "csr_block_pull", "pr_update", "linf_delta",
+__all__ = ["ell_pull", "ell_bucket_pull", "fused_ell_update",
+           "csr_block_pull", "pr_update", "linf_delta",
            "pull_sum_kernels", "update_ranks_kernel", "default_interpret",
            "flash_attention", "scatter_rows", "ell_scatter_rows"]

@@ -1,0 +1,22 @@
+"""Shared kernel-launch policy.
+
+One home for the interpret-mode default so every kernel module can import
+it without cycling through `ops` (which imports the kernel modules): on
+TPU the kernels compile via Mosaic; everywhere else (this container is
+CPU-only) they run in Pallas interpret mode. Callers can still force
+either mode per call with ``interpret=True/False``; ``None`` means "ask
+the backend".
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["default_interpret", "resolve_interpret"]
+
+
+def default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    return default_interpret() if interpret is None else interpret

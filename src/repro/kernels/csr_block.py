@@ -14,6 +14,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .common import resolve_interpret
+
 __all__ = ["csr_block_pull"]
 
 
@@ -34,11 +36,13 @@ def _kernel(rowmap_ref, c_ref, tiles_ref, tmask_ref, out_ref):
 
 def csr_block_pull(c: jnp.ndarray, hi_tiles: jnp.ndarray,
                    hi_tmask: jnp.ndarray, hi_rowmap: jnp.ndarray,
-                   n_rows: int, *, interpret: bool = True) -> jnp.ndarray:
+                   n_rows: int, *,
+                   interpret: bool | None = None) -> jnp.ndarray:
     """out[hi_rowmap[t]] += sum(c[hi_tiles[t]] * hi_tmask[t]) for each tile t.
 
     Returns per-high-slot sums, shape [n_rows].
     """
+    interpret = resolve_interpret(interpret)
     t_cap, tile = hi_tiles.shape
     grid = (t_cap,)
     try:

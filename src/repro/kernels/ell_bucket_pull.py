@@ -1,0 +1,140 @@
+"""Pallas TPU kernels for the degree-bucketed ELL low side.
+
+Two entry points:
+
+``ell_bucket_pull``
+    Plain pull over every bucket: per bucket, the lane-per-vertex gather
+    kernel (`ell_pull`) at that bucket's width, scattered back through the
+    bucket's row-id map. Buckets with width w_b do w_b lanes of work per
+    row instead of a single global d_p — the padded-slot waste the single
+    width layout pays on skewed degree distributions disappears
+    (benchmarks/bench_layout.py quantifies it).
+
+``fused_ell_update``
+    The single-pass fused iteration kernel: one kernel instance gathers a
+    bucket tile's in-edge contributions AND applies the full `updateRanks`
+    epilogue (Eq. 1 / Eq. 2 rank formula, DF-P pruning, δ_N flagging, L∞
+    partials) before writing. The staged path materializes ``contrib [n]``
+    in HBM between the pull kernel and `pr_update`; fusing the epilogue
+    into the gather kernel removes that round-trip — each rank is written
+    exactly once per iteration and never re-read in between.
+
+VMEM budget per instance (f32, defaults): the resident contribution
+vector ``c`` (n·4 B, the dominant term — valid to |V| ≈ 2M on a 16 MB
+core), plus one [vt, w_b] idx/mask tile (vt=512, w_b ≤ 64 → ≤ 256 KB)
+and six [vt] vectors for the epilogue operands — comfortably inside the
+envelope that `ell_pull` already occupies.
+
+Padding discipline (the `pr_update` trick): lanes past a bucket's live
+slots carry r = 1, deg = 1, aff = 0, mask = 0 — contrib 0, rank
+unchanged, |Δr| = 0 — so they are inert in every output including the
+max-partials, and the sentinel row ids drop the writes on scatter-back.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..core.rank_step import rank_value, relative_change
+from .common import resolve_interpret
+from .ell_pull import ell_pull
+
+__all__ = ["ell_bucket_pull", "fused_ell_update"]
+
+
+def ell_bucket_pull(c: jnp.ndarray, buckets, *, vt: int = 512,
+                    interpret: bool | None = None) -> jnp.ndarray:
+    """out[blk.rows[s]] = sum_j c[blk.idx[s, j]] * blk.mask[s, j], over all
+    buckets. Sentinel row ids (>= n) are dropped."""
+    interpret = resolve_interpret(interpret)
+    out = jnp.zeros(c.shape, c.dtype)
+    for blk in buckets:
+        sums = ell_pull(c, blk.idx, blk.mask, vt=vt, interpret=interpret)
+        out = out.at[blk.rows].add(sums, mode="drop")
+    return out
+
+
+def _fused_kernel(c_ref, idx_ref, mask_ref, r_ref, deg_ref, aff_ref,
+                  rnew_ref, affnew_ref, dn_ref, pmax_ref,
+                  *, alpha, inv_n, tau_f, tau_p, prune, closed_form):
+    c = c_ref[...]
+    dt = c.dtype
+    gathered = jnp.take(c, idx_ref[...], axis=0)      # [vt, w_b] gather
+    contrib = jnp.sum(gathered * mask_ref[...].astype(dt), axis=1)
+    r = r_ref[...]
+    d = deg_ref[...]
+    aff = aff_ref[...] > 0
+    # same shared Eq. 1/Eq. 2 math as pr_update, applied in-register on the
+    # just-computed contributions — no HBM round-trip in between
+    c0 = jnp.asarray((1.0 - alpha) * inv_n, dt)
+    rv = rank_value(contrib, r, d, alpha=alpha, c0=c0,
+                    closed_form=closed_form)
+    r_new = jnp.where(aff, rv, r)
+    dr, rel = relative_change(r_new, r)
+    if prune:
+        aff = aff & ~(rel <= tau_p)
+    rnew_ref[...] = r_new
+    affnew_ref[...] = aff.astype(affnew_ref.dtype)
+    dn_ref[...] = (rel > tau_f).astype(dn_ref.dtype)
+    pmax_ref[0] = jnp.max(dr)
+
+
+def fused_ell_update(c: jnp.ndarray, idx: jnp.ndarray, mask: jnp.ndarray,
+                     r_rows: jnp.ndarray, deg_rows: jnp.ndarray,
+                     aff_rows: jnp.ndarray, *, alpha: float, inv_n: float,
+                     tau_f: float, tau_p: float, prune: bool,
+                     closed_form: bool, vt: int = 512,
+                     interpret: bool | None = None):
+    """One-pass pull + updateRanks over one bucket's slot table.
+
+    c: [n] contributions (resident); idx/mask: [cap_b, w_b]; r/deg/aff:
+    [cap_b] operands pre-gathered at the bucket's row ids (sentinel lanes
+    must carry r=1, deg=1, aff=0). Returns per-slot
+    (r_new, affected', delta_n, linf_dr-scalar) — the caller scatters the
+    first three back through the row-id map.
+    """
+    interpret = resolve_interpret(interpret)
+    cap, w = idx.shape
+    dt = c.dtype
+    pad = (-cap) % vt
+    if pad:
+        idx = jnp.pad(idx, ((0, pad), (0, 0)))
+        mask = jnp.pad(mask, ((0, pad), (0, 0)))
+        r_rows = jnp.pad(r_rows, (0, pad), constant_values=1.0)
+        deg_rows = jnp.pad(deg_rows, (0, pad), constant_values=1.0)
+        aff_rows = jnp.pad(aff_rows, (0, pad))
+    npad = cap + pad
+    grid = (npad // vt,)
+    kern = functools.partial(_fused_kernel, alpha=alpha, inv_n=inv_n,
+                             tau_f=tau_f, tau_p=tau_p, prune=prune,
+                             closed_form=closed_form)
+    r_new, aff_new, dn, pmax = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(c.shape, lambda i: (0,)),            # c resident
+            pl.BlockSpec((vt, w), lambda i: (i, 0)),
+            pl.BlockSpec((vt, w), lambda i: (i, 0)),
+            pl.BlockSpec((vt,), lambda i: (i,)),
+            pl.BlockSpec((vt,), lambda i: (i,)),
+            pl.BlockSpec((vt,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((vt,), lambda i: (i,)),
+            pl.BlockSpec((vt,), lambda i: (i,)),
+            pl.BlockSpec((vt,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((npad,), dt),
+            jax.ShapeDtypeStruct((npad,), dt),
+            jax.ShapeDtypeStruct((npad,), dt),
+            jax.ShapeDtypeStruct((grid[0],), dt),
+        ],
+        interpret=interpret,
+    )(c, idx, mask, r_rows.astype(dt), deg_rows.astype(dt),
+      aff_rows.astype(dt))
+    return r_new[:cap], aff_new[:cap], dn[:cap], jnp.max(pmax)

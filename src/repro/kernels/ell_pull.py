@@ -17,6 +17,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .common import resolve_interpret
+
 __all__ = ["ell_pull"]
 
 
@@ -29,11 +31,12 @@ def _kernel(c_ref, idx_ref, mask_ref, out_ref):
 
 
 def ell_pull(c: jnp.ndarray, ell_idx: jnp.ndarray, ell_mask: jnp.ndarray,
-             *, vt: int = 512, interpret: bool = True) -> jnp.ndarray:
+             *, vt: int = 512, interpret: bool | None = None) -> jnp.ndarray:
     """out[v] = sum_j c[ell_idx[v, j]] * ell_mask[v, j].
 
     c: [n] f32/f64 ; ell_idx/ell_mask: [nv, d_p]. nv is padded to vt.
     """
+    interpret = resolve_interpret(interpret)
     nv, d_p = ell_idx.shape
     pad = (-nv) % vt
     if pad:

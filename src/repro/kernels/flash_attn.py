@@ -21,6 +21,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .common import resolve_interpret
+
 try:
     from jax.experimental.pallas import tpu as pltpu
     _VMEM = pltpu.VMEM
@@ -69,9 +71,10 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_s, l_s, acc_s, *, scale, bq, bk,
 
 def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
                     bq: int = 128, bk: int = 128, causal: bool = True,
-                    interpret: bool = True) -> jnp.ndarray:
+                    interpret: bool | None = None) -> jnp.ndarray:
     """q [BH, S, D], k/v [BH, T, D] (GQA: repeat kv heads before the call).
     Returns [BH, S, D]."""
+    interpret = resolve_interpret(interpret)
     BH, S, D = q.shape
     T = k.shape[1]
     bq = min(bq, S)

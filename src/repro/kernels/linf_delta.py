@@ -8,6 +8,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .common import resolve_interpret
+
 __all__ = ["linf_delta"]
 
 
@@ -20,7 +22,8 @@ def _stage2(p_ref, out_ref):
 
 
 def linf_delta(a: jnp.ndarray, b: jnp.ndarray, *, vt: int = 2048,
-               interpret: bool = True) -> jnp.ndarray:
+               interpret: bool | None = None) -> jnp.ndarray:
+    interpret = resolve_interpret(interpret)
     n = a.shape[0]
     pad = (-n) % vt
     if pad:

@@ -1,9 +1,15 @@
 """Jit'd wrappers binding the Pallas kernels to the core engine.
 
 ``pull_sum_kernels(dg, c)`` is a drop-in ``pull_sum_fn`` for
-``core.pagerank``/``core.dynamic``: ELL side via the lane-per-vertex kernel,
-high-degree side via the tiled-CSR kernel. ``interpret`` defaults to True on
-CPU (this container) and False on TPU, where the kernels compile via Mosaic.
+``core.pagerank``/``core.dynamic``: the degree-bucketed ELL side via the
+lane-per-vertex kernel at each bucket's width, high-degree side via the
+tiled-CSR kernel. ``update_ranks_kernel`` is the single-pass Alg. 3 body:
+per bucket, one fused kernel instance gathers the in-edge contributions
+and applies the rank/prune/frontier epilogue before writing — the staged
+``contrib [n]`` HBM round-trip between pull and update exists only on the
+bucket-less (d_p = 0) layout. ``interpret`` defaults to True on CPU (this
+container) and False on TPU, where the kernels compile via Mosaic
+(`kernels.common.default_interpret`).
 """
 from __future__ import annotations
 
@@ -12,45 +18,95 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from .common import default_interpret
 from .csr_block import csr_block_pull
+from .ell_bucket_pull import ell_bucket_pull, fused_ell_update
 from .ell_pull import ell_pull
 from .linf_delta import linf_delta
 from .pr_update import pr_update
 
 __all__ = ["default_interpret", "pull_sum_kernels", "update_ranks_kernel",
-           "linf_delta", "pr_update", "ell_pull", "csr_block_pull"]
-
-
-def default_interpret() -> bool:
-    return jax.default_backend() != "tpu"
+           "linf_delta", "pr_update", "ell_pull", "ell_bucket_pull",
+           "fused_ell_update", "csr_block_pull"]
 
 
 def pull_sum_kernels(dg, c: jnp.ndarray, *, vt: int = 512,
                      interpret: bool | None = None) -> jnp.ndarray:
     """Kernel-backed pull_sum over the hybrid layout (cf. core.pagerank.pull_sum)."""
     interpret = default_interpret() if interpret is None else interpret
-    low = ell_pull(c, dg.ell_idx, dg.ell_mask, vt=vt, interpret=interpret)
+    out = ell_bucket_pull(c, dg.buckets, vt=vt, interpret=interpret)
     hi = csr_block_pull(c, dg.hi_tiles, dg.hi_tmask, dg.hi_rowmap,
                         dg.n_hi_cap, interpret=interpret)
-    return low.at[dg.hi_ids].add(hi, mode="drop")
+    return out.at[dg.hi_ids].add(hi, mode="drop")
 
 
 def update_ranks_kernel(dg, r: jnp.ndarray, affected: jnp.ndarray, *,
                         alpha: float, tau_f: float, tau_p: float,
                         prune: bool, closed_form: bool, track_frontier: bool,
                         interpret: bool | None = None):
-    """Kernel-backed Alg. 3 body: kernel pull + fused pr_update.
+    """Kernel-backed Alg. 3 body, single-pass per bucket.
 
-    Same contract as core.pagerank.update_ranks.
+    Same contract as core.pagerank.update_ranks. Each bucket's slot table
+    goes through `fused_ell_update` (gather + epilogue in one kernel); the
+    high side pulls per-slot sums through the tiled-CSR kernel and runs the
+    same epilogue over the slot table. Every vertex lives in exactly one
+    bucket or one high slot, so each output is written exactly once; lanes
+    behind sentinel ids are inert and dropped on scatter-back.
     """
     interpret = default_interpret() if interpret is None else interpret
-    d = dg.out_deg.astype(r.dtype)
-    c = r / d
-    contrib = pull_sum_kernels(dg, c, interpret=interpret)
-    r_new, aff_new, dn, dmax = pr_update(
-        contrib, r, dg.out_deg, affected.astype(r.dtype), alpha=alpha,
-        tau_f=tau_f, tau_p=tau_p, prune=prune, closed_form=closed_form,
+    n = r.shape[0]
+    inv_n = 1.0 / n
+    dt = r.dtype
+    deg = dg.out_deg.astype(dt)
+    c = r / deg
+    aff_f = affected.astype(dt)
+
+    if not dg.buckets:
+        # "one format" layout (d_p = 0): zero-degree rows live on neither
+        # side, so per-slot coverage is incomplete — keep the staged
+        # pull + full-width update for this configuration
+        contrib = pull_sum_kernels(dg, c, interpret=interpret)
+        r_new, aff_new, dn, dmax = pr_update(
+            contrib, r, dg.out_deg, aff_f, alpha=alpha, inv_n=inv_n,
+            tau_f=tau_f, tau_p=tau_p, prune=prune, closed_form=closed_form,
+            interpret=interpret)
+        aff_out = aff_new > 0 if prune else affected
+        dn_out = (dn > 0) if track_frontier else jnp.zeros_like(affected)
+        return r_new, aff_out, dn_out, dmax
+
+    r_new = r
+    aff_new_f = aff_f
+    dn_f = jnp.zeros_like(aff_f)
+    dmax = jnp.zeros((), dt)
+    for blk in dg.buckets:
+        rows = blk.rows
+        r_b = jnp.take(r, rows, mode="fill", fill_value=1.0)
+        d_b = jnp.take(deg, rows, mode="fill", fill_value=1.0)
+        a_b = jnp.take(aff_f, rows, mode="fill", fill_value=0.0)
+        rb, ab, db, pb = fused_ell_update(
+            c, blk.idx, blk.mask, r_b, d_b, a_b, alpha=alpha, inv_n=inv_n,
+            tau_f=tau_f, tau_p=tau_p, prune=prune, closed_form=closed_form,
+            interpret=interpret)
+        r_new = r_new.at[rows].set(rb, mode="drop")
+        aff_new_f = aff_new_f.at[rows].set(ab, mode="drop")
+        dn_f = dn_f.at[rows].set(db, mode="drop")
+        dmax = jnp.maximum(dmax, pb)
+
+    hi_sums = csr_block_pull(c, dg.hi_tiles, dg.hi_tmask, dg.hi_rowmap,
+                             dg.n_hi_cap, interpret=interpret)
+    ids = dg.hi_ids
+    r_h = jnp.take(r, ids, mode="fill", fill_value=1.0)
+    d_h = jnp.take(deg, ids, mode="fill", fill_value=1.0)
+    a_h = jnp.take(aff_f, ids, mode="fill", fill_value=0.0)
+    rh, ah, dh, ph = pr_update(
+        hi_sums, r_h, d_h, a_h, alpha=alpha, inv_n=inv_n, tau_f=tau_f,
+        tau_p=tau_p, prune=prune, closed_form=closed_form,
         interpret=interpret)
-    aff_out = aff_new > 0 if prune else affected
-    dn_out = (dn > 0) if track_frontier else jnp.zeros_like(affected)
+    r_new = r_new.at[ids].set(rh, mode="drop")
+    aff_new_f = aff_new_f.at[ids].set(ah, mode="drop")
+    dn_f = dn_f.at[ids].set(dh, mode="drop")
+    dmax = jnp.maximum(dmax, ph)
+
+    aff_out = aff_new_f > 0 if prune else affected
+    dn_out = (dn_f > 0) if track_frontier else jnp.zeros_like(affected)
     return r_new, aff_out, dn_out, dmax

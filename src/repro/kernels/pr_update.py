@@ -21,6 +21,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from ..core.rank_step import rank_value, relative_change
+from .common import resolve_interpret
 
 __all__ = ["pr_update"]
 
@@ -53,8 +54,9 @@ def pr_update(contrib: jnp.ndarray, r: jnp.ndarray, out_deg: jnp.ndarray,
               inv_n: float | None = None, tau_f: float = 1e-6,
               tau_p: float = 1e-6, prune: bool = True,
               closed_form: bool = True, vt: int = 1024,
-              interpret: bool = True):
+              interpret: bool | None = None):
     """Returns (r_new, affected', delta_n, linf_dr). affected is {0,1} f32."""
+    interpret = resolve_interpret(interpret)
     n = r.shape[0]
     inv_n = 1.0 / n if inv_n is None else inv_n
     pad = (-n) % vt

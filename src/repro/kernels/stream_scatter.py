@@ -22,7 +22,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from ..obs.spans import get_registry as _obs
-from .ops import default_interpret as _default_interpret
+from .common import default_interpret as _default_interpret
 
 __all__ = ["scatter_rows", "ell_scatter_rows"]
 

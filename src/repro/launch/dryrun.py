@@ -154,7 +154,7 @@ def lower_pagerank(mesh, n_vertices=1_048_576, d_p=64, tile=1024,
     """Dry-run the paper's workload itself on the production mesh: one DF-P
     iteration (all-gather + hybrid pull + fused update) at |V|=1M, |E|~16M."""
     from ..core.distributed import _FIELDS, _make_loop
-    from ..core.pagerank import PRParams
+    from ..core.pagerank import EllBlock, PRParams
     try:
         from jax import shard_map as shard_map_fn
     except ImportError:
@@ -166,9 +166,18 @@ def lower_pagerank(mesh, n_vertices=1_048_576, d_p=64, tile=1024,
     hi_cap = max(1, n_loc // 100)
     t_cap = hi_cap * 4
     shard = P(tuple(mesh.axis_names))
+    # degree buckets a mean-degree-16 power-law block typically selects:
+    # most rows at width 8/32, a thin tail at the d_p crossover width
+    widths = sorted({w for w in (8, 32) if w < d_p} | {d_p})
+    caps = [n_loc] + [max(1, n_loc // (4 ** i))
+                      for i in range(1, len(widths))]
+    buckets = tuple(
+        EllBlock(rows=jax.ShapeDtypeStruct((nd, cap), jnp.int32),
+                 idx=jax.ShapeDtypeStruct((nd, cap, w), jnp.int32),
+                 mask=jax.ShapeDtypeStruct((nd, cap, w), jnp.float32))
+        for w, cap in zip(widths, caps))
     sgd = {
-        "ell_idx": jax.ShapeDtypeStruct((nd, n_loc, d_p), jnp.int32),
-        "ell_mask": jax.ShapeDtypeStruct((nd, n_loc, d_p), jnp.float32),
+        "buckets": buckets,
         "hi_pos": jax.ShapeDtypeStruct((nd, hi_cap), jnp.int32),
         "hi_tiles": jax.ShapeDtypeStruct((nd, t_cap, tile), jnp.int32),
         "hi_tmask": jax.ShapeDtypeStruct((nd, t_cap, tile), jnp.float32),

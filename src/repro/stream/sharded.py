@@ -10,8 +10,9 @@ device arrays — instead of the O(|E|) re-partition + full restage
 batch (DESIGN.md §7).
 
 Reuse, not reimplementation: each shard's host mirror IS the single-device
-`_HalfLayout` machinery (ELL fill-cursor edits, tile free lists, degree-
-crossing migration with hysteresis) instantiated on that shard's
+`_HalfLayout` machinery (bucketed-ELL fill-cursor edits, per-bucket and
+tile free lists, degree-crossing migration with hysteresis — between
+buckets and across the d_p boundary) instantiated on that shard's
 `build_hybrid_rows` block — row ids local, stored column ids global. Only
 the device residency differs: arrays are stacked [nd, ...] so shard_map can
 consume them, and the refresh scatters land at [shard, rows].
@@ -39,8 +40,9 @@ import numpy as np
 
 from ..core.distributed import (ShardedGraph, shard_block_rows, shard_bounds,
                                 sharded_need)
-from ..core.graph import (Graph, build_hybrid_rows, edge_keys,
-                          graph_from_sorted_keys, next_pow2)
+from ..core.graph import (Graph, build_hybrid_rows, choose_bucket_widths,
+                          edge_keys, graph_from_sorted_keys, next_pow2)
+from ..core.pagerank import EllBlock
 from ..obs.spans import get_registry as _obs
 from .delta import Delta
 from .snapshot import (CapacityError, SnapshotStats, _HalfLayout, _pad_rows,
@@ -91,13 +93,25 @@ class ShardedSnapshot:
 
     # -- construction / rebuild ---------------------------------------------
 
-    def _caps_for(self, indeg: np.ndarray) -> dict:
-        """Worst-shard high/tile needs, pow2 with headroom (shared caps)."""
-        need_hi, need_t = sharded_need(indeg, self.nd, self.n_loc,
-                                       self.d_p, self.tile)
+    def _caps_for(self, indeg: np.ndarray,
+                  widths: Optional[tuple] = None) -> dict:
+        """Worst-shard bucket/high/tile needs, pow2 with headroom (caps are
+        shared across shards — stacking needs equal shapes). Widths are
+        chosen once from the global in-degree histogram and then frozen
+        across rebuilds (passed back in); only caps may grow."""
+        if widths is None:
+            widths = choose_bucket_widths(indeg, self.d_p)
+        # band=True: caps must cover the hysteresis band each bucket can
+        # accumulate under streaming, not just the placement census
+        need_hi, need_t, need_b = sharded_need(indeg, self.nd, self.n_loc,
+                                               self.d_p, self.tile, widths,
+                                               band=True)
         return dict(
             hi_cap=next_pow2(int(need_hi * self._hi_headroom), 8),
-            t_cap=next_pow2(int(need_t * self._tile_headroom), 8))
+            t_cap=next_pow2(int(need_t * self._tile_headroom), 8),
+            widths=tuple(widths),
+            bucket_caps=tuple(next_pow2(int(nb * self._hi_headroom), 8)
+                              for nb in need_b))
 
     def _adopt(self, g: Graph, caps: Optional[dict] = None) -> None:
         """(Re)build every shard's half from a host Graph at fixed caps."""
@@ -109,7 +123,9 @@ class ShardedSnapshot:
             hr = build_hybrid_rows(off, dat, d_p=self.d_p, tile=self.tile,
                                    n_rows=self.n_loc,
                                    n_hi_cap=caps["hi_cap"],
-                                   t_cap=caps["t_cap"])
+                                   t_cap=caps["t_cap"],
+                                   widths=caps["widths"],
+                                   bucket_caps=caps["bucket_caps"])
             lo, hi = shard_bounds(s, self.n_loc, self.n)
             row_deg = np.zeros(self.n_loc, np.int64)
             row_deg[:hi - lo] = self._indeg[lo:hi]
@@ -118,10 +134,15 @@ class ShardedSnapshot:
                 half.low_water = self._low_water
             self._halves.append(half)
         # stacked device residency (copies: the mirrors mutate in place)
-        self.dev_ell_idx = jnp.asarray(
-            np.stack([h.ell_idx for h in self._halves]))
-        self.dev_ell_mask = jnp.asarray(
-            np.stack([h.ell_mask for h in self._halves]))
+        self.dev_buckets: List[EllBlock] = [
+            EllBlock(
+                rows=jnp.asarray(
+                    np.stack([h.bk_rows[bi] for h in self._halves])),
+                idx=jnp.asarray(
+                    np.stack([h.bk_idx[bi] for h in self._halves])),
+                mask=jnp.asarray(
+                    np.stack([h.bk_mask[bi] for h in self._halves])))
+            for bi in range(len(caps["widths"]))]
         self.dev_hi_tiles = jnp.asarray(
             np.stack([h.hi_tiles for h in self._halves]))
         self.dev_hi_tmask = jnp.asarray(
@@ -135,9 +156,17 @@ class ShardedSnapshot:
         self._dev_outdeg = jnp.asarray(outdeg.reshape(self.nd, self.n_loc))
 
     def _rebuild(self, reason: str) -> None:
-        caps = self._caps_for(self._indeg)
+        caps = self._caps_for(self._indeg, widths=self._caps["widths"])
         # never shrink: keep stacked shapes stable unless we *must* grow
-        caps = {k: max(v, self._caps[k]) for k, v in caps.items()}
+        # (widths stay frozen; bucket_caps grow elementwise)
+        caps = dict(
+            hi_cap=max(caps["hi_cap"], self._caps["hi_cap"]),
+            t_cap=max(caps["t_cap"], self._caps["t_cap"]),
+            widths=self._caps["widths"],
+            bucket_caps=tuple(max(a, b) for a, b in
+                              zip(caps["bucket_caps"],
+                                  self._caps["bucket_caps"])),
+        )
         self._adopt(self.graph(), caps)
         self._last_rebuild_reason = reason
 
@@ -150,7 +179,7 @@ class ShardedSnapshot:
     @property
     def sg(self) -> ShardedGraph:
         return ShardedGraph(
-            ell_idx=self.dev_ell_idx, ell_mask=self.dev_ell_mask,
+            buckets=tuple(self.dev_buckets),
             hi_pos=self.dev_hi_pos, hi_tiles=self.dev_hi_tiles,
             hi_tmask=self.dev_hi_tmask, hi_rowmap=self.dev_hi_rowmap,
             out_deg=self._dev_outdeg, valid=self._dev_valid, n_true=self.n)
@@ -214,17 +243,30 @@ class ShardedSnapshot:
         t1 = time.perf_counter()
         with obs.span("snapshot.device_refresh", annotate=True):
             for s, half in enumerate(self._halves):
-                rows, tiles, rowmap_dirty, side_dirty = half.drain_dirty()
+                dirty = half.drain_dirty()
+                tiles = dirty["tiles"]
                 js = jnp.asarray(s)
-                if rows.size:
-                    at = _pad_rows(rows, next_pow2(rows.size))
-                    self.dev_ell_idx = _scatter_shard_rows(
-                        self.dev_ell_idx, js, jnp.asarray(at),
-                        jnp.asarray(half.ell_idx[at]))
-                    self.dev_ell_mask = _scatter_shard_rows(
-                        self.dev_ell_mask, js, jnp.asarray(at),
-                        jnp.asarray(half.ell_mask[at]))
-                    obs.inc("snapshot.shard_scatters")
+                for bi, slots in enumerate(dirty["bucket_slots"]):
+                    if slots.size:
+                        at = _pad_rows(slots, next_pow2(slots.size))
+                        blk = self.dev_buckets[bi]
+                        new_idx = _scatter_shard_rows(
+                            blk.idx, js, jnp.asarray(at),
+                            jnp.asarray(half.bk_idx[bi][at]))
+                        new_mask = _scatter_shard_rows(
+                            blk.mask, js, jnp.asarray(at),
+                            jnp.asarray(half.bk_mask[bi][at]))
+                        self.dev_buckets[bi] = blk._replace(
+                            idx=new_idx, mask=new_mask)
+                        obs.inc("snapshot.shard_scatters")
+                        stats.rows_touched += int(slots.size)
+                    # bucket row-id maps, restaged per shard only on
+                    # migration (they are small: [cap_b])
+                    if dirty["bucket_maps"][bi]:
+                        blk = self.dev_buckets[bi]
+                        self.dev_buckets[bi] = blk._replace(
+                            rows=blk.rows.at[s].set(
+                                jnp.asarray(half.bk_rows[bi].copy())))
                 if tiles.size:
                     at = _pad_rows(tiles, next_pow2(tiles.size))
                     self.dev_hi_tiles = _scatter_shard_rows(
@@ -235,13 +277,12 @@ class ShardedSnapshot:
                         jnp.asarray(half.hi_tmask[at]))
                     obs.inc("snapshot.shard_scatters")
                 # small per-shard 1-D side tables, restaged only when touched
-                if rowmap_dirty:
+                if dirty["rowmap_dirty"]:
                     self.dev_hi_rowmap = self.dev_hi_rowmap.at[s].set(
                         jnp.asarray(half.hi_rowmap.copy()))
-                if side_dirty:
+                if dirty["side_dirty"]:
                     self.dev_hi_pos = self.dev_hi_pos.at[s].set(
                         jnp.asarray(half.hi_ids.copy()))
-                stats.rows_touched += int(rows.size)
                 stats.tiles_touched += int(tiles.size)
             touched = np.unique(np.concatenate([d_s, i_s]))
             if touched.size:

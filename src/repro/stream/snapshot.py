@@ -12,8 +12,11 @@ plus O(touched rows) device scatters, instead of the O(|E|) host rebuild
 Mechanics per edited row (mirrors are host numpy; device arrays are updated
 by row/tile scatters, via `kernels.stream_scatter` on TPU):
 
-  * low-degree endpoints: ELL row edits — append at the row's fill cursor,
-    delete by swapping the last valid entry into the hole;
+  * low-degree endpoints: bucketed-ELL slot edits — append at the row's
+    fill cursor, delete by swapping the last valid entry into the hole; a
+    row that outgrows its bucket's width promotes to the next wider bucket,
+    one that shrinks to half the narrower width demotes (per-bucket free
+    lists, same swap discipline as the tile pool);
   * high-degree endpoints: tile-slot edits against a **free list** — the
     last tile of a vertex is the only partial one, so inserts append there
     (allocating a fresh tile when it fills) and deletes swap from it
@@ -41,9 +44,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.graph import (Graph, HybridLayout, build_hybrid, edge_keys,
+from ..core.graph import (Graph, HybridLayout, bucket_band_counts,
+                          build_hybrid, choose_bucket_widths, edge_keys,
                           graph_from_sorted_keys, keys_to_edges)
-from ..core.pagerank import DeviceGraph
+from ..core.pagerank import DeviceGraph, EllBlock
 from ..obs.spans import get_registry as _obs
 from .delta import Delta, next_pow2
 
@@ -143,14 +147,25 @@ class _HalfLayout:
     `row_deg[v]` is the number of neighbors in row v (in-degree for the pull
     half, out-degree for the fwd half). The DeviceGraph's `out_deg` field is
     the *opposite* orientation's degree and is owned by the snapshot.
+
+    The low side is the degree-bucketed ELL: each bucket keeps its own
+    [cap_b, w_b] idx/mask mirrors, row-id map and free-slot list. A row
+    that outgrows its bucket's width migrates to the next wider bucket (or
+    to the tile side past d_p); a row that shrinks migrates down only once
+    its degree drops to half the *destination* width (bucket hysteresis) —
+    or, from the tile side, to `low_water` (the d_p hysteresis).
     """
 
     def __init__(self, lay, row_deg: np.ndarray,
                  scatter_impl: str = "jnp", stage_device: bool = True):
         n = lay.n
         self.n, self.d_p, self.tile = n, lay.d_p, lay.tile
-        self.ell_idx = np.ascontiguousarray(lay.ell_idx)
-        self.ell_mask = np.ascontiguousarray(lay.ell_mask)
+        self.widths = tuple(lay.widths)
+        self.bk_rows = [np.ascontiguousarray(b.rows) for b in lay.buckets]
+        self.bk_idx = [np.ascontiguousarray(b.idx) for b in lay.buckets]
+        self.bk_mask = [np.ascontiguousarray(b.mask) for b in lay.buckets]
+        self.bucket_of = np.ascontiguousarray(lay.bucket_of)
+        self.slot_of = np.ascontiguousarray(lay.slot_of)
         self.hi_tiles = np.ascontiguousarray(lay.hi_tiles)
         self.hi_tmask = np.ascontiguousarray(lay.hi_tmask)
         self.hi_rowmap = np.ascontiguousarray(lay.hi_rowmap)
@@ -158,8 +173,17 @@ class _HalfLayout:
         self.is_low = np.ascontiguousarray(lay.is_low)
         self.row_deg = row_deg.astype(np.int64).copy()
         self.scatter_impl = scatter_impl
-        # slot / tile occupancy, reconstructed from the built layout: slots
-        # [0, n_hi) and tiles [0, nt_total) are used contiguously.
+        # slot / tile occupancy, reconstructed from the built layout: ELL
+        # bucket slots [0, cnt_b), hi slots [0, n_hi) and tiles
+        # [0, nt_total) are used contiguously.
+        nb = len(self.widths)
+        self.free_bslots: List[List[int]] = []
+        for bi in range(nb):
+            used = np.nonzero(self.bk_rows[bi] < n)[0]
+            used_set = set(used.tolist())
+            self.free_bslots.append(
+                [s for s in range(self.bk_rows[bi].shape[0] - 1, -1, -1)
+                 if s not in used_set])
         n_hi_cap = lay.n_hi_cap
         hi = np.nonzero(lay.hi_ids < n)[0]
         self.hi_slot = np.full(n, -1, np.int64)
@@ -174,10 +198,11 @@ class _HalfLayout:
         used_s = set(hi.tolist())
         self.free_slots = [s for s in range(n_hi_cap - 1, -1, -1)
                            if s not in used_s]
-        self._dirty_rows: set = set()
+        self._dirty_slots: List[set] = [set() for _ in range(nb)]
         self._dirty_tiles: set = set()
+        self._bmap_dirty = [False] * nb  # bucket rows map changed (migration)
         self._rowmap_dirty = False   # hi_rowmap changed (tile alloc/free)
-        self._side_dirty = False     # hi_ids / is_low changed (migration)
+        self._side_dirty = False     # hi_ids/is_low/bucket_of/slot_of changed
         self.migrations = 0
         # Device residents. Staged from COPIES: on CPU, jax may zero-copy
         # alias a suitably-aligned numpy buffer, and these mirrors are
@@ -188,8 +213,11 @@ class _HalfLayout:
         # owns STACKED device arrays itself, draining `drain_dirty()` into
         # per-shard scatters instead of calling `device_refresh`.
         if stage_device:
-            self.dev_ell_idx = jnp.asarray(self.ell_idx.copy())
-            self.dev_ell_mask = jnp.asarray(self.ell_mask.copy())
+            self.dev_bk_rows = [jnp.asarray(a.copy()) for a in self.bk_rows]
+            self.dev_bk_idx = [jnp.asarray(a.copy()) for a in self.bk_idx]
+            self.dev_bk_mask = [jnp.asarray(a.copy()) for a in self.bk_mask]
+            self.dev_bucket_of = jnp.asarray(self.bucket_of.copy())
+            self.dev_slot_of = jnp.asarray(self.slot_of.copy())
             self.dev_hi_tiles = jnp.asarray(self.hi_tiles.copy())
             self.dev_hi_tmask = jnp.asarray(self.hi_tmask.copy())
             self.dev_hi_rowmap = jnp.asarray(self.hi_rowmap.copy())
@@ -199,48 +227,71 @@ class _HalfLayout:
     # -- dirty-state handoff (sharded snapshot path) -------------------------
 
     def drain_dirty(self):
-        """Return and clear (rows, tiles, rowmap_dirty, side_dirty).
+        """Return and clear the dirty state as a dict:
+        `bucket_slots` (list of slot-id arrays per bucket), `bucket_maps`
+        (list of bool: bucket rows map changed), `tiles`, `rowmap_dirty`,
+        `side_dirty`.
 
         For owners that stage the device arrays themselves (stacked sharded
         layouts): the host mirrors are current, the returned ids say exactly
-        which rows/tiles must be re-scattered.
+        which slots/tiles must be re-scattered.
         """
-        nr, nt = len(self._dirty_rows), len(self._dirty_tiles)
-        rows = np.fromiter(self._dirty_rows, np.int32, nr)
-        tiles = np.fromiter(self._dirty_tiles, np.int32, nt)
-        rowmap_dirty, side_dirty = self._rowmap_dirty, self._side_dirty
-        self._dirty_rows.clear()
+        nt = len(self._dirty_tiles)
+        out = dict(
+            bucket_slots=[np.fromiter(s, np.int32, len(s))
+                          for s in self._dirty_slots],
+            bucket_maps=list(self._bmap_dirty),
+            tiles=np.fromiter(self._dirty_tiles, np.int32, nt),
+            rowmap_dirty=self._rowmap_dirty,
+            side_dirty=self._side_dirty,
+        )
+        for s in self._dirty_slots:
+            s.clear()
         self._dirty_tiles.clear()
+        self._bmap_dirty = [False] * len(self.widths)
         self._rowmap_dirty = self._side_dirty = False
-        return rows, tiles, rowmap_dirty, side_dirty
+        return out
 
     # -- structural edits (host mirrors) ------------------------------------
 
     def insert(self, row: int, nbr: int) -> None:
         if self.is_low[row]:
+            bi = int(self.bucket_of[row])
             d = int(self.row_deg[row])
-            if d < self.d_p:
-                self.ell_idx[row, d] = nbr
-                self.ell_mask[row, d] = 1.0
-                self.row_deg[row] = d + 1
-                self._dirty_rows.add(row)
-                return
-            self._migrate_to_high(row)
+            if d >= self.widths[bi]:
+                if bi + 1 < len(self.widths):
+                    self._migrate_bucket(row, bi, bi + 1)
+                    bi += 1
+                else:
+                    self._migrate_to_high(row)
+                    self._hi_insert(row, nbr)
+                    return
+            slot = int(self.slot_of[row])
+            self.bk_idx[bi][slot, d] = nbr
+            self.bk_mask[bi][slot, d] = 1.0
+            self.row_deg[row] = d + 1
+            self._dirty_slots[bi].add(slot)
+            return
         self._hi_insert(row, nbr)
 
     def delete(self, row: int, nbr: int) -> None:
         if self.is_low[row]:
+            bi = int(self.bucket_of[row])
+            slot = int(self.slot_of[row])
             d = int(self.row_deg[row])
-            j = int(np.nonzero(self.ell_idx[row, :d] == nbr)[0][0])
+            j = int(np.nonzero(self.bk_idx[bi][slot, :d] == nbr)[0][0])
             last = d - 1
-            self.ell_idx[row, j] = self.ell_idx[row, last]
-            self.ell_idx[row, last] = 0
-            self.ell_mask[row, last] = 0.0
+            self.bk_idx[bi][slot, j] = self.bk_idx[bi][slot, last]
+            self.bk_idx[bi][slot, last] = 0
+            self.bk_mask[bi][slot, last] = 0.0
             self.row_deg[row] = last
-            self._dirty_rows.add(row)
+            self._dirty_slots[bi].add(slot)
+            # demote only once the row would half-fill the narrower bucket
+            if bi > 0 and last <= self.widths[bi - 1] // 2:
+                self._migrate_bucket(row, bi, bi - 1)
             return
         self._hi_delete(row, nbr)
-        if self.row_deg[row] <= self.low_water:
+        if self.widths and self.row_deg[row] <= self.low_water:
             self._migrate_to_low(row)
 
     @property
@@ -250,6 +301,37 @@ class _HalfLayout:
     @low_water.setter
     def low_water(self, v: int) -> None:
         self._low_water = min(v, self.d_p)
+
+    # -- ELL bucket slot management -----------------------------------------
+
+    def _bucket_free(self, bi: int, slot: int) -> None:
+        self.bk_idx[bi][slot] = 0
+        self.bk_mask[bi][slot] = 0.0
+        self.bk_rows[bi][slot] = self.n  # sentinel
+        self.free_bslots[bi].append(slot)
+        self._dirty_slots[bi].add(slot)
+        self._bmap_dirty[bi] = True
+
+    def _bucket_place(self, row: int, bi: int, nbrs: np.ndarray) -> None:
+        if not self.free_bslots[bi]:
+            raise CapacityError(f"bucket {self.widths[bi]} slots exhausted")
+        slot = self.free_bslots[bi].pop()
+        self.bk_rows[bi][slot] = row
+        self.bk_idx[bi][slot, :nbrs.size] = nbrs
+        self.bk_mask[bi][slot, :nbrs.size] = 1.0
+        self.bucket_of[row] = bi
+        self.slot_of[row] = slot
+        self._dirty_slots[bi].add(slot)
+        self._bmap_dirty[bi] = True
+        self._side_dirty = True
+
+    def _migrate_bucket(self, row: int, bi_from: int, bi_to: int) -> None:
+        d = int(self.row_deg[row])
+        slot = int(self.slot_of[row])
+        nbrs = self.bk_idx[bi_from][slot, :d].copy()
+        self._bucket_free(bi_from, slot)
+        self._bucket_place(row, bi_to, nbrs)
+        self.migrations += 1
 
     def _hi_insert(self, row: int, nbr: int) -> None:
         slot = int(self.hi_slot[row])
@@ -310,11 +392,13 @@ class _HalfLayout:
         self.hi_ids[slot] = row
         self._side_dirty = True
         d = int(self.row_deg[row])
-        nbrs = self.ell_idx[row, :d].copy()
-        self.ell_idx[row, :d] = 0
-        self.ell_mask[row, :d] = 0.0
+        bi = int(self.bucket_of[row])
+        bslot = int(self.slot_of[row])
+        nbrs = self.bk_idx[bi][bslot, :d].copy()
+        self._bucket_free(bi, bslot)
+        self.bucket_of[row] = len(self.widths)  # CSR-side sentinel
+        self.slot_of[row] = slot
         self.is_low[row] = False
-        self._dirty_rows.add(row)
         tiles = self.slot_tiles[slot]
         for off in range(0, d, self.tile):
             if not self.free_tiles:
@@ -346,10 +430,11 @@ class _HalfLayout:
         self._side_dirty = True
         self.free_slots.append(slot)
         self.hi_slot[row] = -1
-        self.ell_idx[row, :d] = nbrs
-        self.ell_mask[row, :d] = 1.0
+        # land in the narrowest bucket that fits the current degree — the
+        # same placement rule build_hybrid_rows uses
+        bi = int(np.searchsorted(np.asarray(self.widths), max(d, 1), "left"))
+        self._bucket_place(row, bi, nbrs)
         self.is_low[row] = True
-        self._dirty_rows.add(row)
         self.migrations += 1
 
     # -- fragmentation ------------------------------------------------------
@@ -381,13 +466,17 @@ class _HalfLayout:
         return _scatter_pair(dev_idx, dev_mask, rows, new_i, new_m)
 
     def device_refresh(self) -> tuple:
-        """Push dirty rows/tiles to the device arrays; returns (#rows, #tiles)."""
-        nr, nt = len(self._dirty_rows), len(self._dirty_tiles)
-        if nr:
-            ids = np.fromiter(self._dirty_rows, np.int32, nr)
-            self.dev_ell_idx, self.dev_ell_mask = self._scatter(
-                self.dev_ell_idx, self.dev_ell_mask,
-                self.ell_idx, self.ell_mask, ids)
+        """Push dirty slots/tiles to the device arrays; returns (#slots, #tiles)."""
+        nr = sum(len(s) for s in self._dirty_slots)
+        nt = len(self._dirty_tiles)
+        for bi, dirty in enumerate(self._dirty_slots):
+            if dirty:
+                ids = np.fromiter(dirty, np.int32, len(dirty))
+                self.dev_bk_idx[bi], self.dev_bk_mask[bi] = self._scatter(
+                    self.dev_bk_idx[bi], self.dev_bk_mask[bi],
+                    self.bk_idx[bi], self.bk_mask[bi], ids)
+            if self._bmap_dirty[bi]:
+                self.dev_bk_rows[bi] = jnp.asarray(self.bk_rows[bi].copy())
         if nt:
             ids = np.fromiter(self._dirty_tiles, np.int32, nt)
             self.dev_hi_tiles, self.dev_hi_tmask = self._scatter(
@@ -401,14 +490,23 @@ class _HalfLayout:
         if self._side_dirty:
             self.dev_hi_ids = jnp.asarray(self.hi_ids.copy())
             self.dev_is_low = jnp.asarray(self.is_low.copy())
+            self.dev_bucket_of = jnp.asarray(self.bucket_of.copy())
+            self.dev_slot_of = jnp.asarray(self.slot_of.copy())
             self._side_dirty = False
-        self._dirty_rows.clear()
+        for s in self._dirty_slots:
+            s.clear()
         self._dirty_tiles.clear()
+        self._bmap_dirty = [False] * len(self.widths)
         return nr, nt
 
     def device_graph(self, out_deg: jnp.ndarray) -> DeviceGraph:
+        buckets = tuple(
+            EllBlock(rows=self.dev_bk_rows[bi], idx=self.dev_bk_idx[bi],
+                     mask=self.dev_bk_mask[bi])
+            for bi in range(len(self.widths)))
         return DeviceGraph(
-            ell_idx=self.dev_ell_idx, ell_mask=self.dev_ell_mask,
+            buckets=buckets, bucket_of=self.dev_bucket_of,
+            slot_of=self.dev_slot_of,
             hi_ids=self.dev_hi_ids, hi_tiles=self.dev_hi_tiles,
             hi_tmask=self.dev_hi_tmask, hi_rowmap=self.dev_hi_rowmap,
             is_low=self.dev_is_low, out_deg=out_deg)
@@ -440,17 +538,33 @@ class DeviceSnapshot:
 
     # -- construction / rebuild ---------------------------------------------
 
-    def _caps_for(self, indeg: np.ndarray, outdeg: np.ndarray) -> dict:
+    def _caps_for(self, indeg: np.ndarray, outdeg: np.ndarray,
+                  widths: Optional[tuple] = None) -> dict:
+        # widths are chosen ONCE from both orientations' histograms and then
+        # frozen across rebuilds (passed back in): only bucket_caps may grow,
+        # so device shapes stay stable modulo genuine capacity growth.
+        if widths is None:
+            widths = choose_bucket_widths(
+                np.concatenate([indeg, outdeg]), self.d_p)
+
         def side(deg):
             hi = deg[deg > self.d_p]
             n_hi = int(hi.size)
             nt = int(((hi + self.tile - 1) // self.tile).sum())
-            return n_hi, nt
-        hi_p, nt_p = side(indeg)
-        hi_f, nt_f = side(outdeg)
+            # bucket caps must cover the hysteresis *band*, not just the
+            # initial placement census — see bucket_band_counts
+            nb = bucket_band_counts(deg, widths, self.d_p)
+            return n_hi, nt, nb
+
+        hi_p, nt_p, nb_p = side(indeg)
+        hi_f, nt_f, nb_f = side(outdeg)
         n_hi_cap = next_pow2(int(max(hi_p, hi_f, 1) * self._hi_headroom), 8)
         t_cap = next_pow2(int(max(nt_p, nt_f, 1) * self._tile_headroom), 8)
-        return dict(n_hi_cap=n_hi_cap, t_cap=t_cap)
+        bucket_caps = tuple(
+            next_pow2(int(max(int(p), int(f), 1) * self._hi_headroom), 8)
+            for p, f in zip(nb_p, nb_f))
+        return dict(n_hi_cap=n_hi_cap, t_cap=t_cap,
+                    widths=tuple(widths), bucket_caps=bucket_caps)
 
     def _adopt(self, g: Graph, caps: Optional[dict] = None) -> None:
         """(Re)build both halves from a host Graph at fixed capacities."""
@@ -469,9 +583,18 @@ class DeviceSnapshot:
 
     def _rebuild(self, reason: str) -> None:
         g = self.graph()
-        caps = self._caps_for(self._indeg, self._outdeg)
+        caps = self._caps_for(self._indeg, self._outdeg,
+                              widths=self._caps["widths"])
         # never shrink: keep device shapes stable unless we *must* grow
-        caps = {k: max(v, self._caps[k]) for k, v in caps.items()}
+        # (widths stay frozen; bucket_caps grow elementwise)
+        caps = dict(
+            n_hi_cap=max(caps["n_hi_cap"], self._caps["n_hi_cap"]),
+            t_cap=max(caps["t_cap"], self._caps["t_cap"]),
+            widths=self._caps["widths"],
+            bucket_caps=tuple(max(a, b) for a, b in
+                              zip(caps["bucket_caps"],
+                                  self._caps["bucket_caps"])),
+        )
         self._adopt(g, caps)
         self._last_rebuild_reason = reason
 

@@ -1,0 +1,209 @@
+"""Degree-bucketed ELL parity suite (layout acceptance gate).
+
+Three representations of the same graph must agree to 1e-12 L_inf on every
+engine: the degree-bucketed default layout, the paper's single-width hybrid
+forced via widths=(d_p,), and the pure-numpy / kernels.ref oracles. Covers
+static PageRank, dense DF-P, compact DF-P, a streamed batch sequence that
+forces bucket-crossing migrations, and the d_p=0 all-CSR degenerate case.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (BatchUpdate, PRParams, apply_batch, batch_to_device,
+                        build_hybrid, dfp_pagerank, dfp_pagerank_compact,
+                        init_ranks, l1_error, powerlaw_graph, pull_max,
+                        pull_sum, random_batch, reference_pagerank,
+                        static_pagerank, to_device)
+from repro.core.pagerank import update_ranks
+from repro.kernels import pull_sum_kernels, update_ranks_kernel
+from repro.kernels.ref import pr_update_ref
+from repro.stream import DeviceSnapshot, ingest
+
+D_P, TILE = 8, 32
+TOL = 1e-12
+STEP = dict(alpha=0.85, tau_f=1e-6, tau_p=1e-6, prune=True,
+            closed_form=True, track_frontier=True)
+
+
+def _linf(a, b):
+    return float(np.max(np.abs(np.asarray(a, np.float64)
+                               - np.asarray(b, np.float64))))
+
+
+def _layout_pair(g):
+    """(bucketed default, forced single-width) device graphs of g."""
+    dg_b = to_device(build_hybrid(g, d_p=D_P, tile=TILE))
+    dg_s = to_device(build_hybrid(g, d_p=D_P, tile=TILE, widths=(D_P,)))
+    assert len(dg_b.buckets) > 1      # the graph actually exercises buckets
+    assert len(dg_s.buckets) == 1
+    return dg_b, dg_s
+
+
+def _pull_oracle(g, c):
+    seg = np.repeat(np.arange(g.n), np.diff(g.t_offsets))
+    return np.bincount(seg, weights=np.asarray(c, np.float64)[g.t_sources],
+                       minlength=g.n)
+
+
+# ---------------------------------------------------------------------------
+# primitive parity: pull kernels
+# ---------------------------------------------------------------------------
+
+def test_pull_sum_parity_across_layouts_and_kernels():
+    g = powerlaw_graph(300, 2500, seed=0)
+    dg_b, dg_s = _layout_pair(g)
+    c = jnp.asarray(np.random.default_rng(1).random(g.n))
+    want = _pull_oracle(g, c)
+    for dg in (dg_b, dg_s):
+        assert _linf(pull_sum(dg, c), want) <= TOL
+        assert _linf(pull_sum_kernels(dg, c), want) <= TOL
+
+
+def test_pull_max_parity_across_layouts():
+    g = powerlaw_graph(300, 2500, seed=2)
+    dg_b, dg_s = _layout_pair(g)
+    x = jnp.asarray(np.random.default_rng(3).random(g.n))
+    assert _linf(pull_max(dg_b, x), pull_max(dg_s, x)) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# one-step parity against kernels/ref.py
+# ---------------------------------------------------------------------------
+
+def test_update_ranks_step_matches_pr_update_ref():
+    g = powerlaw_graph(250, 2000, seed=4)
+    dg_b, dg_s = _layout_pair(g)
+    rng = np.random.default_rng(5)
+    r = jnp.asarray(rng.random(g.n) / g.n + 1.0 / g.n)
+    aff = jnp.asarray(rng.random(g.n) < 0.7)
+    contrib = _pull_oracle(g, np.asarray(r) / g.out_degree())
+    want_r, want_aff, _, want_d = pr_update_ref(
+        contrib, np.asarray(r), g.out_degree().astype(np.float64),
+        np.asarray(aff), alpha=STEP["alpha"], inv_n=1.0 / g.n,
+        tau_f=STEP["tau_f"], tau_p=STEP["tau_p"], prune=True,
+        closed_form=True)
+    for fn in (update_ranks, update_ranks_kernel):
+        for dg in (dg_b, dg_s):
+            r_new, aff_new, _, delta = fn(dg, r, aff, **STEP)
+            assert _linf(r_new, want_r) <= TOL
+            assert np.array_equal(np.asarray(aff_new), want_aff)
+            assert abs(float(delta) - float(want_d)) <= TOL
+
+
+# ---------------------------------------------------------------------------
+# engine parity: static, dense DF-P, compact DF-P
+# ---------------------------------------------------------------------------
+
+def test_static_pagerank_parity():
+    g = powerlaw_graph(300, 2500, seed=6)
+    dg_b, dg_s = _layout_pair(g)
+    r_b, _ = static_pagerank(dg_b, init_ranks(g.n))
+    r_s, _ = static_pagerank(dg_s, init_ranks(g.n))
+    r_k, _ = static_pagerank(dg_b, init_ranks(g.n),
+                             pull_sum_fn=pull_sum_kernels)
+    assert _linf(r_b, r_s) <= TOL
+    assert _linf(r_b, r_k) <= TOL
+    assert l1_error(np.asarray(r_b), reference_pagerank(g)) < 1e-5
+
+
+def _dfp_setup(seed):
+    g = powerlaw_graph(300, 2500, seed=seed)
+    dg_b, _ = _layout_pair(g)
+    r_prev, _ = static_pagerank(dg_b, init_ranks(g.n))
+    b = random_batch(g, 0.02, seed=seed + 1)
+    g2 = apply_batch(g, b)
+    db = batch_to_device(b, g2.n)
+    return g2, r_prev, db
+
+
+def test_dfp_dense_parity():
+    g2, r_prev, db = _dfp_setup(7)
+    dg_b, dg_s = _layout_pair(g2)
+    r_b, _ = dfp_pagerank(dg_b, r_prev, db)
+    r_s, _ = dfp_pagerank(dg_s, r_prev, db)
+    assert _linf(r_b, r_s) <= TOL
+    assert l1_error(np.asarray(r_b), reference_pagerank(g2)) < 1e-3
+
+
+def test_dfp_compact_parity():
+    g2, r_prev, db = _dfp_setup(9)
+    dg_b, dg_s = _layout_pair(g2)
+    gt = g2.transpose()
+    fwd_b = to_device(build_hybrid(gt, d_p=D_P, tile=TILE))
+    fwd_s = to_device(build_hybrid(gt, d_p=D_P, tile=TILE, widths=(D_P,)))
+    r_b, _ = dfp_pagerank_compact(dg_b, fwd_b, r_prev, db)
+    r_s, _ = dfp_pagerank_compact(dg_s, fwd_s, r_prev, db)
+    assert _linf(r_b, r_s) <= TOL
+    assert l1_error(np.asarray(r_b), reference_pagerank(g2)) < 1e-3
+
+
+# ---------------------------------------------------------------------------
+# streamed batches forcing bucket-crossing migrations
+# ---------------------------------------------------------------------------
+
+def _fan_batch(g, v, k, sign):
+    """Insert (sign=+1) or delete (sign=-1) k in-edges of v, choosing fresh
+    (resp. existing) sources deterministically."""
+    srcs = []
+    for u in range(g.n):
+        if u == v or len(srcs) == k:
+            continue
+        if (sign > 0) != g.has_edge(u, v):
+            srcs.append(u)
+    srcs = np.asarray(srcs[:k], np.int32)
+    dsts = np.full(srcs.shape, v, np.int32)
+    e = np.zeros(0, np.int32)
+    if sign > 0:
+        return BatchUpdate(del_src=e, del_dst=e, ins_src=srcs, ins_dst=dsts)
+    return BatchUpdate(del_src=srcs, del_dst=dsts, ins_src=e, ins_dst=e)
+
+
+def test_streamed_batches_cross_buckets_and_stay_exact():
+    g = powerlaw_graph(200, 1200, seed=11)
+    snap = DeviceSnapshot(g, d_p=D_P, tile=TILE)
+    widths = snap._pull.widths
+    assert len(widths) > 1
+    # a vertex sitting in the narrowest bucket of the pull (in-degree) side
+    indeg = g.in_degree()
+    v = int(np.nonzero(indeg == 1)[0][0])
+    assert snap._pull.bucket_of[v] == 0
+    r_prev, _ = static_pagerank(snap.dg, init_ranks(g.n))
+    # grow v's in-degree past every bucket width and into the CSR side,
+    # then shrink it back below low_water: promotion + demotion crossings
+    for k, sign in ((D_P - 1, +1), (3 * D_P, +1), (4 * D_P - 2, -1)):
+        b = _fan_batch(g, v, k, sign)
+        g = apply_batch(g, b)
+        snap.apply(ingest(b, g.n))
+        db = batch_to_device(b, g.n)
+        dg_s = to_device(build_hybrid(g, d_p=D_P, tile=TILE, widths=(D_P,)))
+        r_snap, _ = dfp_pagerank(snap, r_prev, db)
+        r_single, _ = dfp_pagerank(dg_s, r_prev, db)
+        assert _linf(r_snap, r_single) <= TOL
+        r_prev = r_snap
+    assert snap._pull.migrations > 0
+    assert l1_error(np.asarray(r_prev), reference_pagerank(g)) < 1e-3
+
+
+# ---------------------------------------------------------------------------
+# d_p = 0: widths=() puts every vertex on the CSR side (single format)
+# ---------------------------------------------------------------------------
+
+def test_d_p_zero_all_csr_parity():
+    g = powerlaw_graph(200, 1500, seed=13)
+    lay = build_hybrid(g, d_p=0, tile=TILE)
+    assert lay.widths == () and not lay.is_low.any()
+    dg = to_device(lay)
+    assert dg.buckets == ()
+    c = jnp.asarray(np.random.default_rng(14).random(g.n))
+    assert _linf(pull_sum(dg, c), _pull_oracle(g, c)) <= TOL
+    assert _linf(pull_sum_kernels(dg, c), _pull_oracle(g, c)) <= TOL
+    r0 = init_ranks(g.n)
+    r, _ = static_pagerank(dg, r0)
+    assert l1_error(np.asarray(r), reference_pagerank(g)) < 1e-5
+    # the fused kernel path falls back to staged pull + full-width update
+    aff = jnp.ones(g.n, jnp.bool_)
+    ra, _, _, da = update_ranks(dg, r0, aff, **STEP)
+    rb, _, _, db_ = update_ranks_kernel(dg, r0, aff, **STEP)
+    assert _linf(ra, rb) <= TOL
+    assert abs(float(da) - float(db_)) <= TOL

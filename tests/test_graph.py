@@ -66,14 +66,24 @@ def test_partition_jax_matches_numpy():
 def test_hybrid_layout_covers_all_edges():
     g = powerlaw_graph(400, 3000, seed=8)
     lay = build_hybrid(g, d_p=8, tile=32)
-    # total real edges across ELL + tiles equals |E|
-    total = int(lay.ell_mask.sum() + lay.hi_tmask.sum())
+    # total real edges across ELL buckets + tiles equals |E|
+    total = int(sum(b.mask.sum() for b in lay.buckets) + lay.hi_tmask.sum())
     assert total == g.m
-    # ELL rows of high-degree vertices are fully masked out
+    # high-degree vertices live on no bucket (CSR-side sentinel)
     hi = np.nonzero(~lay.is_low)[0]
-    assert lay.ell_mask[hi].sum() == 0
+    assert (lay.bucket_of[hi] == len(lay.widths)).all()
     # every high vertex id appears once in hi_ids
     assert set(lay.hi_ids[lay.hi_ids < g.n].tolist()) == set(hi.tolist())
+    # every low vertex sits in the narrowest bucket that fits its degree,
+    # at a slot whose row-id map points back at it
+    indeg = g.in_degree()
+    widths = np.asarray(lay.widths)
+    low = np.nonzero(lay.is_low)[0]
+    want = np.searchsorted(widths, np.maximum(indeg[low], 1), side="left")
+    assert np.array_equal(lay.bucket_of[low], want)
+    for v in low[:50]:
+        blk = lay.buckets[lay.bucket_of[v]]
+        assert blk.rows[lay.slot_of[v]] == v
 
 
 def test_hybrid_capacity_padding():
@@ -92,10 +102,16 @@ def test_hybrid_caps_rebuilds_at_stable_shapes():
     contract the dynamic/stream engines rely on)."""
     from repro.core import hybrid_caps
     g = powerlaw_graph(300, 2500, seed=10)
-    lay0 = build_hybrid(g, d_p=8, tile=32, n_hi_cap=64, t_cap=128)
+    caps = hybrid_caps(build_hybrid(g, d_p=8, tile=32,
+                                    n_hi_cap=64, t_cap=128))
+    # default bucket caps are exact counts; a dynamic holder adds headroom
+    caps["bucket_caps"] = tuple(2 * c for c in caps["bucket_caps"])
+    lay0 = build_hybrid(g, **caps)
     g2 = apply_batch(g, random_batch(g, 0.01, seed=11))
     lay2 = build_hybrid(g2, **hybrid_caps(lay0))
-    assert lay2.ell_idx.shape == lay0.ell_idx.shape
+    assert lay2.widths == lay0.widths
+    for b0, b2 in zip(lay0.buckets, lay2.buckets):
+        assert b2.idx.shape == b0.idx.shape
     assert lay2.hi_ids.shape == lay0.hi_ids.shape
     assert lay2.hi_tiles.shape == lay0.hi_tiles.shape
     assert (lay2.d_p, lay2.tile) == (lay0.d_p, lay0.tile)
@@ -113,16 +129,22 @@ def test_build_hybrid_rows_matches_build_hybrid():
     g = powerlaw_graph(300, 3000, seed=5)
     lay = build_hybrid(g, d_p=8, tile=32)
     hr = build_hybrid_rows(g.t_offsets, g.t_sources, d_p=8, tile=32)
-    for f in ("ell_idx", "ell_mask", "hi_ids", "hi_tiles", "hi_tmask",
+    assert lay.widths == hr.widths
+    for b1, b2 in zip(lay.buckets, hr.buckets):
+        assert np.array_equal(b1.rows, b2.rows)
+        assert np.array_equal(b1.idx, b2.idx)
+        assert np.array_equal(b1.mask, b2.mask)
+    for f in ("bucket_of", "slot_of", "hi_ids", "hi_tiles", "hi_tmask",
               "hi_rowmap", "is_low"):
         assert np.array_equal(getattr(lay, f), getattr(hr, f)), f
     assert np.array_equal(hr.row_deg, g.in_degree())
-    # padded empty rows: same fill, extra all-padding rows at the tail
+    # padded empty rows: parked in bucket 0 (degree 0, fully masked), no
+    # real slots disturbed
     hr2 = build_hybrid_rows(g.t_offsets, g.t_sources, d_p=8, tile=32,
                             n_rows=g.n + 7)
-    assert hr2.ell_idx.shape == (g.n + 7, 8)
-    assert np.array_equal(hr2.ell_idx[:g.n], hr.ell_idx)
-    assert not hr2.ell_mask[g.n:].any() and hr2.is_low[g.n:].all()
+    assert hr2.is_low[g.n:].all() and (hr2.bucket_of[g.n:] == 0).all()
+    assert int(sum(b.mask.sum() for b in hr2.buckets)) == \
+        int(sum(b.mask.sum() for b in hr.buckets))
 
 
 def test_build_sharded_trailing_empty_shard():
