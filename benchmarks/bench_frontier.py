@@ -1,0 +1,142 @@
+"""BENCH: frontier-compacted active step vs dense full sweep (PR 8).
+
+The dense DF-P engine body (`update_ranks`) gathers every slot of every
+bucket and every CSR tile each iteration — O(|E|) regardless of how many
+vertices are still converging. The compacted step (`active_frontier` +
+`update_ranks_active`) stream-compacts the affected flags into per-bucket
+active-row lists plus an active-tile list and runs the same math over the
+lists only — O(frontier·degree). This bench sweeps frontier density on a
+power-law graph and reports the crossover:
+
+  frontier/dense-iter       full-sweep baseline (one jitted engine body)
+  frontier/active-d=X       compacted step at density X, derived
+                            ``speedup=``  (dense/active, same inputs) and
+                            ``linf=``     (vs the kernels/ref.py oracle
+                            chain: ell_pull_ref + csr_block_pull_ref +
+                            pr_update_ref — parity target <= 1e-12)
+  frontier/stream-retrace   engine re-traces across a chained
+                            StreamSession, split ``first=`` (batch 1,
+                            expected: the one compile) vs ``tail=``
+                            (batches 2..N, expected 0: the never-shrink
+                            caps keep the jit cache warm)
+
+Acceptance (ISSUE 8): >= 3x iteration speedup at <= 5% density on the
+smoke graph, linf <= 1e-12, tail re-traces == 0.
+"""
+from __future__ import annotations
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import functools
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (active_frontier, caps_for, device_graph, init_ranks,
+                        random_graph, temporal_stream, update_ranks_active)
+from repro.core.pagerank import update_ranks
+from repro.kernels.ref import csr_block_pull_ref, ell_pull_ref, pr_update_ref
+from repro.obs.spans import get_registry
+from repro.stream import StreamSession
+from .common import emit, smoke, timeit
+
+# Uniform graphs (not power-law) for the density sweep: `powerlaw_graph`
+# dedups repeated hub draws, so the requested edge budget collapses ~5-10x
+# and the dense side under-represents the O(|E|) cost the compacted step
+# is built to avoid. avg degree ~50 matches the paper's web-graph regime.
+N = 200_000
+M = 10_000_000
+DENSITIES = (0.005, 0.02, 0.05, 0.2)
+CAPS = dict(d_p=64, tile=256)
+P = dict(alpha=0.85, tau_f=1e-9, tau_p=1e-9, prune=True, closed_form=True,
+         track_frontier=True)
+
+
+def _ref_update(dg, r, dv):
+    """Full-sweep oracle from the kernels/ref.py primitives only."""
+    deg = dg.out_deg.astype(r.dtype)
+    c = r / deg
+    out = jnp.zeros_like(r)
+    for blk in dg.buckets:
+        out = out.at[blk.rows].add(ell_pull_ref(c, blk.idx, blk.mask),
+                                   mode="drop")
+    hi = csr_block_pull_ref(c, dg.hi_tiles, dg.hi_tmask, dg.hi_rowmap,
+                            dg.n_hi_cap)
+    out = out.at[dg.hi_ids].add(hi, mode="drop")
+    return pr_update_ref(out, r, deg, dv.astype(r.dtype), inv_n=1.0 / dg.n,
+                         **{k: P[k] for k in ("alpha", "tau_f", "tau_p",
+                                              "prune", "closed_form")})
+
+
+@functools.partial(jax.jit, static_argnames=("caps",))
+def _active_step(dg, r, dv, caps):
+    af = active_frontier(dg.buckets, dg.hi_ids, dg.hi_rowmap, dv, caps)
+    out = update_ranks_active(dg, r, dv, af, **P)
+    return out, af.overflow
+
+
+def _density_sweep(n, m):
+    g = random_graph(n, m, seed=11)
+    dg = device_graph(g, **CAPS)
+    r = init_ranks(n)
+    dense = jax.jit(lambda dg, r, a: update_ranks(dg, r, a, **P))
+    rng = np.random.default_rng(5)
+    for d in DENSITIES:
+        k = max(1, int(d * n))
+        rows = rng.choice(n, size=k, replace=False)
+        dv_np = np.zeros(n, np.bool_)
+        dv_np[rows] = True
+        dv = jnp.asarray(dv_np)
+        # headroom=2, not the session default 16: the sweep pins density,
+        # so caps only need to cover the known per-bucket active counts
+        caps = caps_for(dg, k, headroom=2)
+        tm_d, out_d = timeit(dense, dg, r, dv)
+        tm_a, (out_a, ovf) = timeit(_active_step, dg, r, dv, caps=caps)
+        r_ref = _ref_update(dg, r, dv)[0]
+        linf = float(jnp.max(jnp.abs(out_a[0] - r_ref)))
+        linf_d = float(jnp.max(jnp.abs(out_d[0] - r_ref)))
+        assert linf_d <= 1e-12, f"dense vs ref linf={linf_d}"
+        if d == DENSITIES[0]:
+            emit("frontier/dense-iter", tm_d.min_s * 1e6,
+                 f"n={n};m={m}", timing=tm_d)
+        emit(f"frontier/active-d={d:g}", tm_a.min_s * 1e6,
+             f"speedup={tm_d.min_s / tm_a.min_s:.2f};linf={linf:.1e};"
+             f"overflow={int(ovf)}", timing=tm_a)
+
+
+def _stream_retrace(n, edges, n_batches):
+    base, batches = temporal_stream(n, edges, n_batches=200, seed=7)
+    reg = get_registry()
+    c0 = reg.counter("frontier.retrace")
+    # engine="dense" pins the caps-threaded driver for every batch so the
+    # retrace series measures the frontier machinery, not engine handoffs.
+    # warm = 2: batch shapes (padded delta arrays) stabilize after the
+    # first two batches; the tail then isolates caps-driven re-traces.
+    warm = 2
+    sess = StreamSession(base, engine="dense", **CAPS)
+    for b in batches[:warm]:
+        sess.apply(b)
+    first = reg.counter("frontier.retrace") - c0
+    c1 = reg.counter("frontier.retrace")
+    for b in batches[warm:n_batches]:
+        sess.apply(b)
+    tail = reg.counter("frontier.retrace") - c1
+    growth = reg.counter("frontier.caps_growth")
+    emit("frontier/stream-retrace", 0.0,
+         f"first={first};tail={tail};caps_growth={growth};"
+         f"batches={n_batches}")
+
+
+def run():
+    n, m = (20_000, 1_000_000) if smoke() else (N, M)
+    _density_sweep(n, m)
+    if smoke():
+        _stream_retrace(4_000, 40_000, n_batches=6)
+    else:
+        _stream_retrace(20_000, 300_000, n_batches=12)
+
+
+if __name__ == "__main__":
+    run()

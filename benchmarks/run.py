@@ -10,6 +10,8 @@
   (beyond paper)    -> bench_stream     (incremental snapshot vs rebuild)
   (beyond paper)    -> bench_distributed (single vs 1-D vs 2-D sharded,
                        static + streamed DF-P; forced host mesh, subprocess)
+  (beyond paper)    -> bench_frontier    (frontier-compacted active step vs
+                       dense full sweep: density sweep + stream retraces)
 
 Prints ``name,us_per_call,derived`` CSV rows (unchanged format) and writes
 the structured twin — a ``repro.obs/bench-v1`` RunReport with per-record
@@ -25,6 +27,11 @@ record schema); no keys = run everything.
 """
 import argparse
 import sys
+from pathlib import Path
+
+#: root-level per-PR perf snapshot (repro.obs/bench-v1, same payload as
+#: --out) — the PR number tracks the repo's perf trajectory in-tree.
+PR_JSON = Path(__file__).resolve().parents[1] / "BENCH_8.json"
 
 
 def main(argv=None) -> int:
@@ -37,6 +44,8 @@ def main(argv=None) -> int:
                     help="tiny CI sizes; same code paths and schema")
     ap.add_argument("--out", default="BENCH_obs.json",
                     help="structured report path ('' disables)")
+    ap.add_argument("--pr-json", default=str(PR_JSON),
+                    help="root-level per-PR perf snapshot ('' disables)")
     ap.add_argument("--jsonl", default="",
                     help="also write the JSONL form here")
     ap.add_argument("--name", default="bench",
@@ -49,11 +58,12 @@ def main(argv=None) -> int:
 
     from . import (bench_static, bench_dynamic, bench_sweep, bench_partition,
                    bench_fusion, bench_layout, bench_stream,
-                   bench_distributed)
+                   bench_distributed, bench_frontier)
     mods = {"static": bench_static, "dynamic": bench_dynamic,
             "sweep": bench_sweep, "partition": bench_partition,
             "fusion": bench_fusion, "layout": bench_layout,
-            "stream": bench_stream, "distributed": bench_distributed}
+            "stream": bench_stream, "distributed": bench_distributed,
+            "frontier": bench_frontier}
     unknown = [k for k in args.keys if k not in mods]
     if unknown:
         ap.error(f"unknown bench keys {unknown}; choose from {list(mods)}")
@@ -77,6 +87,9 @@ def main(argv=None) -> int:
             report.write_json(args.out)
             print(f"# wrote {args.out} ({len(report.benchmarks)} records)",
                   file=sys.stderr)
+        if args.pr_json:
+            report.write_json(args.pr_json)
+            print(f"# wrote {args.pr_json}", file=sys.stderr)
         if args.jsonl:
             report.write_jsonl(args.jsonl)
     return 0

@@ -11,7 +11,11 @@ from .rank_step import rank_step, rank_value, relative_change, teleport
 from .pagerank import (DeviceGraph, EllBlock, PRParams, to_device,
                        device_graph, as_device_graph, init_ranks, pull_sum,
                        pull_max, update_ranks, static_pagerank)
-from .frontier import initial_affected, expand_affected, reach_affected
+from .frontier import (initial_affected, expand_affected, reach_affected,
+                       ActiveFrontier, FrontierCaps, active_frontier,
+                       active_pull_sum, caps_for, caps_for_parts, merge_caps,
+                       plan_capacity, push_expand, expand_frontier,
+                       stream_compact, update_ranks_active)
 from .dynamic import (DeviceBatch, batch_to_device, nd_pagerank, dt_pagerank,
                       df_pagerank, dfp_pagerank)
 from .compact import (forward_device_graph, dfp_pagerank_compact,
@@ -31,6 +35,10 @@ __all__ = [
     "EllBlock",
     "init_ranks", "pull_sum", "pull_max", "update_ranks", "static_pagerank",
     "initial_affected", "expand_affected", "reach_affected",
+    "ActiveFrontier", "FrontierCaps", "active_frontier", "active_pull_sum",
+    "caps_for", "caps_for_parts", "merge_caps", "plan_capacity",
+    "push_expand", "expand_frontier", "stream_compact",
+    "update_ranks_active",
     "DeviceBatch", "batch_to_device", "nd_pagerank", "dt_pagerank",
     "df_pagerank", "dfp_pagerank",
     "forward_device_graph", "dfp_pagerank_compact", "df_pagerank_compact",

@@ -23,16 +23,15 @@ One write per affected vertex per iteration is preserved throughout.
 from __future__ import annotations
 
 import functools
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 
 from .dynamic import DeviceBatch, _loop
-from .frontier import expand_affected, initial_affected
-from .graph import Graph, build_hybrid, next_pow2 as _next_pow2
+from .frontier import (FrontierCaps, active_frontier, initial_affected,
+                       plan_capacity, push_expand, update_ranks_active)
+from .graph import Graph, build_hybrid
 from .pagerank import DeviceGraph, PRParams, as_device_graph, to_device
-from .rank_step import rank_value, relative_change, teleport
 from ..obs.trace import trace_init, trace_record
 
 __all__ = ["forward_device_graph", "dfp_pagerank_compact",
@@ -46,80 +45,12 @@ def forward_device_graph(g: Graph, d_p: int = 64, tile: int = 1024,
     return to_device(build_hybrid(g.transpose(), d_p=d_p, tile=tile, **caps))
 
 
-def _compact(flags: jnp.ndarray, k: int, fill: int) -> jnp.ndarray:
-    return jnp.nonzero(flags, size=k, fill_value=fill)[0]
-
-
-def _gather_pull(dg: DeviceGraph, c: jnp.ndarray, idx: jnp.ndarray,
-                 tile_sel: jnp.ndarray) -> jnp.ndarray:
-    """Pull contributions for the K vertices in `idx` only.
-
-    ELL side: each compacted vertex's row lives in exactly one degree
-    bucket; gather K slots per bucket (dead lanes hit the cap sentinel and
-    read mask 0) and sum the per-bucket partials — every vertex picks up
-    its value from its own bucket, zeros elsewhere. High side: `tile_sel`
-    is a compacted list of tile ids whose owner vertex is affected; their
-    sums are scattered into a dense [n]-buffer (cheap: K_t · tile work,
-    one write per tile)."""
-    dt = c.dtype
-    nb = len(dg.buckets)
-    b_of = jnp.take(dg.bucket_of, idx, mode="fill", fill_value=nb)
-    s_of = jnp.take(dg.slot_of, idx, mode="fill", fill_value=0)
-    low = jnp.zeros(idx.shape, dt)
-    for bi, blk in enumerate(dg.buckets):
-        slot = jnp.where(b_of == bi, s_of, blk.rows.shape[0])
-        rows_idx = jnp.take(blk.idx, slot, axis=0, mode="fill", fill_value=0)
-        rows_mask = jnp.take(blk.mask, slot, axis=0, mode="fill",
-                             fill_value=0.0)
-        low = low + jnp.sum(jnp.take(c, rows_idx, axis=0)
-                            * rows_mask.astype(dt), axis=1)
-
-    tiles = jnp.take(dg.hi_tiles, tile_sel, axis=0, mode="fill", fill_value=0)
-    tmask = jnp.take(dg.hi_tmask, tile_sel, axis=0, mode="fill",
-                     fill_value=0.0)
-    tsums = jnp.sum(jnp.take(c, tiles, axis=0) * tmask.astype(dt), axis=1)
-    slot = jnp.take(dg.hi_rowmap, tile_sel, mode="fill",
-                    fill_value=dg.n_hi_cap - 1)
-    owner = jnp.take(dg.hi_ids, slot)                    # vertex id or n
-    hi_dense = jnp.zeros((dg.n + 1,), dt).at[owner].add(tsums, mode="drop")
-    return low + jnp.take(hi_dense, jnp.minimum(idx, dg.n), axis=0) \
-        * (idx < dg.n)
-
-
 def _scatter_expand(fwd: DeviceGraph, dn_flags: jnp.ndarray, kn: int
                     ) -> jnp.ndarray:
-    """Paper Alg. 5 expandAffected, compacted: out-neighbors of flagged
-    vertices get marked. Returns a dense bool [n] of newly-marked vertices."""
-    n = fwd.n
-    src = _compact(dn_flags, kn, n)
-    nb = len(fwd.buckets)
-    b_of = jnp.take(fwd.bucket_of, src, mode="fill", fill_value=nb)
-    s_of = jnp.take(fwd.slot_of, src, mode="fill", fill_value=0)
-    out = jnp.zeros((n + 1,), jnp.bool_)
-    for bi, blk in enumerate(fwd.buckets):
-        slot = jnp.where(b_of == bi, s_of, blk.rows.shape[0])
-        nbr = jnp.take(blk.idx, slot, axis=0, mode="fill", fill_value=0)
-        msk = jnp.take(blk.mask, slot, axis=0, mode="fill", fill_value=0.0)
-        tgt = jnp.where(msk > 0, nbr, n)
-        out = out.at[tgt.reshape(-1)].set(True, mode="drop")
-    # high-out-degree frontier vertices: walk their tile lists
-    hi_aff = jnp.take(dn_flags, jnp.minimum(fwd.hi_ids, n - 1),
-                      mode="fill", fill_value=False) & (fwd.hi_ids < n)
-    tile_on = jnp.take(hi_aff, fwd.hi_rowmap)
-    tgt2 = jnp.where((fwd.hi_tmask > 0) & tile_on[:, None], fwd.hi_tiles, n)
-    out = out.at[tgt2.reshape(-1)].set(True, mode="drop")
-    return out[:n]
-
-
-def _tiles_for(dg: DeviceGraph, dv: jnp.ndarray, kt: int):
-    """Compacted ids of high-in-degree tiles whose owner is affected.
-    Returns (tile_sel, n_needed) — callers must treat n_needed > kt as a
-    capacity overflow (silent truncation would corrupt hub ranks)."""
-    n = dg.n
-    owner_aff = jnp.take(dv, jnp.minimum(dg.hi_ids, n - 1),
-                         mode="fill", fill_value=False) & (dg.hi_ids < n)
-    tile_on = jnp.take(owner_aff, dg.hi_rowmap)
-    return _compact(tile_on, kt, dg.hi_tiles.shape[0]), jnp.sum(tile_on)
+    """Paper Alg. 5 expandAffected, compacted (core.frontier.push_expand):
+    out-neighbors of flagged vertices get marked. Returns a dense bool [n]
+    of newly-marked vertices (complete only while Σδ_N ≤ kn)."""
+    return push_expand(fwd, dn_flags, kn)[0]
 
 
 @functools.partial(jax.jit,
@@ -130,44 +61,37 @@ def _compact_loop(dg: DeviceGraph, fwd: DeviceGraph, r0, dv0, dn0,
                   trace: bool = False):
     n = dg.n
     dt = r0.dtype
-    d = dg.out_deg.astype(dt)
-    c0 = teleport(params.alpha, n, dt)
+    # the engine's (K, K_t, K_n) sizing expressed on the shared capacity
+    # plan: per-bucket lists are K clamped to each bucket's slot count, the
+    # total-rows budget K is enforced separately below (this engine *exits*
+    # to the dense driver on overflow rather than paying full sweeps, so an
+    # oversized total frontier must still trip it even when every
+    # per-bucket list individually fits)
+    caps = FrontierCaps(
+        bucket=tuple(min(k, int(b.rows.shape[0])) for b in dg.buckets),
+        hi=min(k, dg.n_hi_cap), tiles=kt, dn=kn, fwd_tiles=0)
 
     def body(state):
         r, dv, dn, _, i, tb = state
-        dv = jnp.where(i > 0, dv | _scatter_expand(fwd, dn, kn), dv)
+        marks, push_ovf = push_expand(fwd, dn, kn)
+        dv = jnp.where(i > 0, dv | marks, dv)
         dv_in = dv   # post-expansion frontier entering this sweep (trace)
-        tsel, n_tiles = _tiles_for(dg, dv, kt)
-        overflow = (jnp.sum(dv) > k) | (jnp.sum(dn) > kn) | (n_tiles > kt)
-        idx = _compact(dv, k, n)
-        c = r / d
-        s = _gather_pull(dg, c, idx, tsel)
-        r_i = jnp.take(r, jnp.minimum(idx, n - 1))
-        d_i = jnp.take(d, jnp.minimum(idx, n - 1))
-        # the compact binding of the shared Eq. 1/Eq. 2 math (core.rank_step):
-        # dead lanes (idx == n) evaluate against r_i so dr/rel read 0 there
-        rv = rank_value(s, r_i, d_i, alpha=params.alpha, c0=c0,
-                        closed_form=prune)
-        live = idx < n
-        dr, rel = relative_change(jnp.where(live, rv, r_i), r_i, floor=1e-300)
-        rv = jnp.where(live, rv, 0.0)
-        r_new = r.at[idx].set(rv, mode="drop")
-        if prune:
-            keep = live & ~(rel <= params.tau_p)
-            dv = dv.at[idx].set(False, mode="drop")
-            dv = dv.at[jnp.where(keep, idx, n)].set(True, mode="drop")
-        dn_new = jnp.zeros((n,), jnp.bool_).at[
-            jnp.where(live & (rel > params.tau_f), idx, n)].set(
-            True, mode="drop")
+        af = active_frontier(dg.buckets, dg.hi_ids, dg.hi_rowmap, dv, caps)
+        overflow = af.overflow | push_ovf | (af.n_rows > k)
+        r_new, dv_new, dn_new, dmax = update_ranks_active(
+            dg, r, dv, af, alpha=params.alpha, tau_f=params.tau_f,
+            tau_p=params.tau_p, prune=prune, closed_form=prune,
+            track_frontier=True)
         # an overflowing iteration must not commit a truncated update: keep
         # the pre-iteration state and exit with delta=inf (dense fallback)
         r_new = jnp.where(overflow, r, r_new)
-        dv = jnp.where(overflow, state[1], dv)
+        dv = jnp.where(overflow, dv_in, dv_new)
         dn_new = jnp.where(overflow, dn, dn_new)
-        delta = jnp.where(overflow, jnp.asarray(jnp.inf, dt), jnp.max(dr))
+        delta = jnp.where(overflow, jnp.asarray(jnp.inf, dt), dmax)
         if trace:
             # the overflow iteration records linf=inf — the visible marker
-            # of the dense handoff
+            # of the dense handoff. Frontier-size reductions live only on
+            # this traced path; the untraced loop computes none.
             frontier = jnp.sum(dv_in)
             tb = trace_record(
                 tb, i, linf=delta, frontier=frontier,
@@ -176,12 +100,13 @@ def _compact_loop(dg: DeviceGraph, fwd: DeviceGraph, r0, dv0, dn0,
         return r_new, dv, dn_new, delta, i + 1, tb
 
     def cond(state):
-        r, dv, dn, delta, i, _ = state
-        within = (jnp.sum(dv) <= k) & (jnp.sum(dn) <= kn)
-        return (delta > params.tau) & (i < params.max_iter) & within \
+        delta, i = state[3], state[4]
+        return (delta > params.tau) & (i < params.max_iter) \
             & ~jnp.isinf(delta)
-    # NOTE: body sets delta=inf on any capacity overflow (incl. tile list),
-    # so an exit through `within` always routes to the dense fallback.
+    # NOTE: body sets delta=inf on ANY capacity overflow (row, tile or
+    # worklist), and an overflowing body commits nothing — so the inf check
+    # alone routes every overflow to the dense fallback; the old per-cond
+    # Σδ_V / Σδ_N reductions were dead work and are gone.
 
     tb0 = trace_init(params.max_iter, dt,
                      "dfp_compact" if prune else "df_compact") if trace \
@@ -200,10 +125,10 @@ def _df_like_compact(dg, fwd, r_prev, batch: DeviceBatch,
     dv, dn = initial_affected(n, batch.del_src, batch.del_dst, batch.ins_src)
     # initial marking via the compacted out-edge walk (paper Alg. 5), not a
     # dense O(|E|) pull — the batch is tiny relative to the graph
-    kn_init = min(_next_pow2(int(jnp.sum(dn)) * 2 + 2), n)
+    kn_init = plan_capacity(int(jnp.sum(dn)) + 1, n, headroom=2)
     dv = dv | _scatter_expand(fwd, dn, kn_init)
     n_init = int(jnp.sum(dv)) + 1
-    k = min(_next_pow2(n_init * headroom), n)
+    k = plan_capacity(n_init, n, headroom=headroom)
     kn = k
     # No tile compaction: affected hubs legitimately need their full tile
     # lists, and the high side is a small fraction of total edge slots —

@@ -33,7 +33,10 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
-from .frontier import initial_affected
+from .frontier import (FS_ACTIVE_ROWS, FS_ACTIVE_TILES, FS_COMPACT, FS_ITERS,
+                       FS_NB, FS_OVERFLOW, active_frontier, active_pull_sum,
+                       caps_for_parts, fstats_init, initial_affected,
+                       publish_fstats)
 from .graph import (Graph, bucket_band_counts, build_hybrid_rows,
                     choose_bucket_widths, next_pow2)
 from .pagerank import EllBlock, PRParams
@@ -65,7 +68,7 @@ __all__ = ["ShardedGraph", "build_sharded", "sharded_caps", "sharded_need",
            "shard_bounds", "shard_block_rows",
            "initial_affected_sharded", "shard_vector", "unshard_vector",
            "distributed_static_pagerank", "distributed_dfp_pagerank",
-           "pagerank_step_specs"]
+           "sharded_frontier_caps", "pagerank_step_specs"]
 
 
 class ShardedGraph(NamedTuple):
@@ -316,7 +319,7 @@ def _squeeze_shard(sgd: dict) -> dict:
 
 def _make_loop(axis, params: PRParams, n_true: int, *, dfp: bool,
                compact_frontier: bool = False, delta_every: int = 1,
-               trace: bool = False):
+               trace: bool = False, frontier_caps=None):
     """Build the per-shard while-loop body. `axis` is the (tuple of) mesh
     axis name(s) the vertex dimension is sharded over.
 
@@ -341,7 +344,16 @@ def _make_loop(axis, params: PRParams, n_true: int, *, dfp: bool,
     shards (out_spec P()). Tracing adds two small per-iteration collectives
     and never feeds back into the rank math; with delta_every>1 the traced
     L∞ is exact every iteration even though the loop predicate still only
-    sees it every k-th."""
+    sees it every k-th.
+
+    `frontier_caps` (core.frontier.FrontierCaps over the PER-SHARD layout
+    shapes — `caps_for_parts`) switches the rank pull to the compacted
+    active lists: each shard compacts its own δ_V slice against its own
+    layout and pulls only the active rows/tiles from the gathered
+    contribution vector; a shard whose lists overflow runs its dense local
+    pull for that iteration (per-shard lax.cond — sound because neither
+    branch holds a collective, so shards may diverge freely). The loop then
+    also carries a frontier-stats vector, psum-reduced on exit."""
 
     def loop(sgd: dict, r0, dv0, dn0):
         sgl = _squeeze_shard(sgd)
@@ -349,17 +361,36 @@ def _make_loop(axis, params: PRParams, n_true: int, *, dfp: bool,
         dt = r0.dtype
         d = sgl["out_deg"].astype(dt)
         valid = sgl["valid"]
+        n_loc = valid.shape[0]
 
         def body(state):
-            r, dv, dn, _, i, tb = state
+            r, dv, dn, _, i, tb, fs = state
             if dfp:
                 gdt = jnp.uint8 if compact_frontier else dt
                 dn_full = jax.lax.all_gather(dn.astype(gdt), axis, tiled=True)
                 grow = _local_pull_max(sgl, dn_full.astype(dt)) > 0
                 dv = (dv | grow) & valid
             c_full = jax.lax.all_gather(r / d, axis, tiled=True)
-            s = _local_pull(sgl, c_full)
             dv_in = dv & valid
+            if frontier_caps is not None:
+                af = active_frontier(sgl["buckets"], sgl["hi_pos"],
+                                     sgl["hi_rowmap"], dv_in, frontier_caps)
+                s = jax.lax.cond(
+                    af.overflow,
+                    lambda: _local_pull(sgl, c_full),
+                    lambda: active_pull_sum(
+                        sgl["buckets"], sgl["hi_pos"], sgl["hi_tiles"],
+                        sgl["hi_tmask"], sgl["hi_rowmap"], af, c_full,
+                        n_loc))
+                ok = (~af.overflow).astype(jnp.int32)
+                fs = fs.at[FS_ITERS].add(1).at[FS_COMPACT].add(ok) \
+                       .at[FS_OVERFLOW].add(1 - ok) \
+                       .at[FS_ACTIVE_ROWS].add(af.n_rows * ok) \
+                       .at[FS_ACTIVE_TILES].add(af.n_tiles * ok)
+                if len(sgl["buckets"]):
+                    fs = fs.at[FS_NB:].add(af.bucket_counts * ok)
+            else:
+                s = _local_pull(sgl, c_full)
             r_new, dv, dn_new, local = rank_step(
                 s, r, dv_in, sgl["out_deg"], alpha=params.alpha,
                 n_norm=n_true, tau_f=params.tau_f, tau_p=params.tau_p,
@@ -380,19 +411,25 @@ def _make_loop(axis, params: PRParams, n_true: int, *, dfp: bool,
                 tb = trace_record(tb, i, linf=gmax, frontier=counts[0],
                                   delta_n=counts[1] if dfp else 0,
                                   pruned=counts[2] if dfp else 0)
-            return r_new, dv, dn_new, delta, i + 1, tb
+            return r_new, dv, dn_new, delta, i + 1, tb, fs
 
         def cond(state):
-            _, _, _, delta, i, _ = state
+            delta, i = state[3], state[4]
             return (delta > params.tau) & (i < params.max_iter)
 
         tb0 = trace_init(params.max_iter, dt,
                          "dfp_1d" if dfp else "static_1d") if trace \
             else jnp.asarray(0, jnp.int32)
+        nb = len(sgl["buckets"])
         init = (r0, dv0, dn0, jnp.asarray(jnp.inf, dt),
-                jnp.asarray(0, jnp.int32), tb0)
-        r, dv, dn, _, iters, tb = jax.lax.while_loop(cond, body, init)
-        return (r[None], iters, tb) if trace else (r[None], iters)
+                jnp.asarray(0, jnp.int32), tb0, fstats_init(nb))
+        r, dv, dn, _, iters, tb, fs = jax.lax.while_loop(cond, body, init)
+        out = [r[None], iters]
+        if trace:
+            out.append(tb)
+        if frontier_caps is not None:
+            out.append(jax.lax.psum(fs, axis))
+        return tuple(out)
 
     return loop
 
@@ -427,20 +464,46 @@ def distributed_static_pagerank(mesh: Mesh, sg: ShardedGraph, r0: jnp.ndarray,
     return jax.jit(fn)(_as_dict(sg), r0, on, off)
 
 
+def sharded_frontier_caps(sg: ShardedGraph, est: int,
+                          headroom: int = 16):
+    """FrontierCaps over the PER-SHARD layout shapes for `frontier_caps` of
+    `distributed_dfp_pagerank`. `est` is the expected initial frontier size
+    of the worst shard (a global estimate works too — caps only affect
+    speed, never correctness)."""
+    return caps_for_parts(
+        tuple(int(b.rows.shape[1]) for b in sg.buckets),
+        int(sg.hi_pos.shape[1]), int(sg.hi_tiles.shape[1]),
+        sg.n_loc, est, headroom)
+
+
 def distributed_dfp_pagerank(mesh: Mesh, sg: ShardedGraph, r_prev: jnp.ndarray,
                              dv0: jnp.ndarray, dn0: jnp.ndarray,
                              params: PRParams = PRParams(),
-                             delta_every: int = 1, trace: bool = False):
+                             delta_every: int = 1, trace: bool = False,
+                             frontier_caps=None):
     """DF-P on the cluster: dv0/dn0 are the initial affected / to-expand
     flags ([nd, n_loc], from `initial_affected_sharded`). Iteration 0 pulls
     dn0 through the layout — the paper's initial frontier expansion — so
     callers seed raw flags; pre-expanded dv0 (with dn0 zeroed) also works.
-    ``trace=True`` appends a replicated obs.trace.TraceBuffer."""
+    ``trace=True`` appends a replicated obs.trace.TraceBuffer.
+    ``frontier_caps`` (`sharded_frontier_caps`) compacts each shard's rank
+    pull to its active rows/tiles — identical results, frontier.* obs
+    counters published host-side."""
     axis, shard = _specs(mesh)
     loop = _make_loop(axis, params, sg.n_true, dfp=True,
-                      delta_every=delta_every, trace=trace)
-    out_specs = (shard, P(), P()) if trace else (shard, P())
+                      delta_every=delta_every, trace=trace,
+                      frontier_caps=frontier_caps)
+    out_specs = [shard, P()]
+    if trace:
+        out_specs.append(P())
+    if frontier_caps is not None:
+        out_specs.append(P())
     fn = shard_map_loop(loop, mesh,
                         ({k: shard for k in _FIELDS}, shard, shard, shard),
-                        out_specs)
-    return jax.jit(fn)(_as_dict(sg), r_prev, dv0, dn0)
+                        tuple(out_specs))
+    out = jax.jit(fn)(_as_dict(sg), r_prev, dv0, dn0)
+    if frontier_caps is not None:
+        *out, fs = out
+        publish_fstats(fs)
+        out = tuple(out)
+    return out

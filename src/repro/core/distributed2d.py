@@ -27,6 +27,8 @@ import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
 from .distributed import shard_map_loop
+from .frontier import (FS_ACTIVE_ROWS, FS_COMPACT, FS_ITERS, FS_OVERFLOW,
+                       fstats_init, publish_fstats, stream_compact)
 from .graph import Graph
 from .pagerank import PRParams
 from .rank_step import rank_step
@@ -109,7 +111,8 @@ def build_sharded_2d(g: Graph, r: int, c: int, d_p: int = 8) -> Sharded2D:
 
 
 def _loop_2d(params: PRParams, n_true: int, r: int, c: int, *, dfp: bool,
-             row_axis="data", col_axis="model", trace: bool = False):
+             row_axis="data", col_axis="model", trace: bool = False,
+             row_cap: int | None = None):
     """Per-device while loop. Mesh axes: row_axis size r, col_axis size c.
 
     The per-iteration math is the shared `core.rank_step.rank_step` on the
@@ -119,7 +122,18 @@ def _loop_2d(params: PRParams, n_true: int, r: int, c: int, *, dfp: bool,
     iteration 0 too, so δ_N may be seeded raw (paper's initial expansion,
     device-side) exactly as in the 1-D engine. ``trace`` carries an
     obs.trace.TraceBuffer; channels are psum'd over both mesh axes so the
-    buffer is replicated (out_spec P())."""
+    buffer is replicated (out_spec P()).
+
+    ``row_cap`` (static) compacts the rank pull's destination loop: the
+    mesh-row's δ_V slice is assembled by the same transpose-permute +
+    row-axis all-gather the owned pieces use, stream-compacted into a
+    [row_cap] active-destination list, and the edge-block gather-reduce runs
+    over those rows only — per-device edge work O(row_cap · d_p) instead of
+    O(V/r · d_p). Overflow falls back to the full block for that iteration
+    (the cond's branches hold no collectives — the all-gather/psum-scatter/
+    ppermute schedule stays outside, so divergence across devices is fine).
+    The expansion pull stays full-width: its output IS the new frontier,
+    which is exactly what is not yet known."""
 
     def loop(sgd, r0, dv0, dn0):
         ell_idx = sgd["ell_idx"][0]
@@ -129,29 +143,64 @@ def _loop_2d(params: PRParams, n_true: int, r: int, c: int, *, dfp: bool,
         valid = sgd["valid"][0]
         rank0, dv0, dn0 = r0[0], dv0[0], dn0[0]
         dt = rank0.dtype
+        v_r = ell_idx.shape[0]
+        perm = [(a * c + b, b * c + a) for a in range(r) for b in range(c)]
 
-        def pull(vec_own):
+        def pull(vec_own, sel=None, ovf=None):
             """vec_own [blk] -> per-destination sums [v_r] -> own piece."""
             # 1. gather this mesh-row's owned pieces = contiguous row range i
             v_row = jax.lax.all_gather(vec_own, col_axis, tiled=True)
-            # 2. local masked gather-reduce over the edge block
-            part = jnp.sum(jnp.take(v_row, ell_idx, axis=0)
-                           * ell_mask.astype(vec_own.dtype), axis=1)
+
+            # 2. local masked gather-reduce over the edge block — all
+            # destinations, or only the compacted active list
+            def full_part():
+                return jnp.sum(jnp.take(v_row, ell_idx, axis=0)
+                               * ell_mask.astype(vec_own.dtype), axis=1)
+
+            if sel is None:
+                part = full_part()
+            else:
+                def active_part():
+                    idx_s = jnp.take(ell_idx, sel, axis=0, mode="fill",
+                                     fill_value=0)
+                    msk_s = jnp.take(ell_mask, sel, axis=0, mode="fill",
+                                     fill_value=0.0)
+                    sums = jnp.sum(jnp.take(v_row, idx_s, axis=0)
+                                   * msk_s.astype(vec_own.dtype), axis=1)
+                    return jnp.zeros((v_r,), vec_own.dtype) \
+                        .at[sel].add(sums, mode="drop")
+                part = jax.lax.cond(ovf, full_part, active_part)
             # 3. reduce partials over mesh rows; keep piece i of range j
             piece = jax.lax.psum_scatter(part, row_axis, scatter_dimension=0,
                                          tiled=True)
             # 4. piece belongs to block (j, i) -> transpose devices
-            perm = [(a * c + b, b * c + a) for a in range(r)
-                    for b in range(c)]
             return jax.lax.ppermute(piece, (row_axis, col_axis), perm)
 
+        def dv_row_of(dv_own):
+            """Owned δ_V pieces -> this mesh-row's destination-range slice:
+            the transpose permute parks block j·c+i on device (i, j), so the
+            row-axis gather concatenates blocks j·c+0 .. j·c+(r-1) — range j
+            in vertex order (r == c)."""
+            dvp = jax.lax.ppermute(dv_own.astype(jnp.uint8),
+                                   (row_axis, col_axis), perm)
+            return jax.lax.all_gather(dvp, row_axis, tiled=True) > 0
+
         def body(state):
-            rank, dv, dn, _, it, tb = state
+            rank, dv, dn, _, it, tb, fs = state
             if dfp:
                 grow = pull(dn.astype(dt)) > 0          # Σ>0 ⇔ OR
                 dv = (dv | grow) & valid
-            s = pull(rank / deg)
             dv_in = dv & valid
+            if row_cap is not None:
+                sel, cnt = stream_compact(dv_row_of(dv_in), row_cap, v_r)
+                ovf = cnt > row_cap
+                s = pull(rank / deg, sel, ovf)
+                ok = (~ovf).astype(jnp.int32)
+                fs = fs.at[FS_ITERS].add(1).at[FS_COMPACT].add(ok) \
+                       .at[FS_OVERFLOW].add(1 - ok) \
+                       .at[FS_ACTIVE_ROWS].add(cnt * ok)
+            else:
+                s = pull(rank / deg)
             r_new, dv_new, dn_new, local = rank_step(
                 s, rank, dv_in, out_deg, alpha=params.alpha,
                 n_norm=n_true, tau_f=params.tau_f, tau_p=params.tau_p,
@@ -168,37 +217,52 @@ def _loop_2d(params: PRParams, n_true: int, r: int, c: int, *, dfp: bool,
                 tb = trace_record(tb, it, linf=delta, frontier=counts[0],
                                   delta_n=counts[1] if dfp else 0,
                                   pruned=counts[2] if dfp else 0)
-            return r_new, dv, dn, delta, it + 1, tb
+            return r_new, dv, dn, delta, it + 1, tb, fs
 
         def cond(state):
-            _, _, _, delta, it, _ = state
+            delta, it = state[3], state[4]
             return (delta > params.tau) & (it < params.max_iter)
 
         tb0 = trace_init(params.max_iter, dt,
                          "dfp_2d" if dfp else "static_2d") if trace \
             else jnp.asarray(0, jnp.int32)
         init = (rank0, dv0, dn0, jnp.asarray(jnp.inf, dt),
-                jnp.asarray(0, jnp.int32), tb0)
-        rank, dv, dn, _, iters, tb = jax.lax.while_loop(cond, body, init)
-        return (rank[None], iters, tb) if trace else (rank[None], iters)
+                jnp.asarray(0, jnp.int32), tb0, fstats_init(0))
+        rank, dv, dn, _, iters, tb, fs = jax.lax.while_loop(cond, body, init)
+        out = [rank[None], iters]
+        if trace:
+            out.append(tb)
+        if row_cap is not None:
+            out.append(jax.lax.psum(fs, (row_axis, col_axis)))
+        return tuple(out)
 
     return loop
 
 
 def _run(mesh: Mesh, sg: Sharded2D, r0, dv0, dn0, params, dfp: bool,
-         trace: bool = False):
+         trace: bool = False, row_cap: int | None = None):
     axes = mesh.axis_names
     row_axis, col_axis = axes[-2], axes[-1]
     shard = P((row_axis, col_axis))
     sgd = {"ell_idx": sg.ell_idx, "ell_mask": sg.ell_mask,
            "out_deg": sg.out_deg, "valid": sg.valid}
     loop = _loop_2d(params, sg.n_true, sg.r, sg.c, dfp=dfp,
-                    row_axis=row_axis, col_axis=col_axis, trace=trace)
-    out_specs = (shard, P(), P()) if trace else (shard, P())
+                    row_axis=row_axis, col_axis=col_axis, trace=trace,
+                    row_cap=row_cap)
+    out_specs = [shard, P()]
+    if trace:
+        out_specs.append(P())
+    if row_cap is not None:
+        out_specs.append(P())
     fn = shard_map_loop(loop, mesh,
                         ({k: shard for k in sgd}, shard, shard, shard),
-                        out_specs)
-    return jax.jit(fn)(sgd, r0, dv0, dn0)
+                        tuple(out_specs))
+    out = jax.jit(fn)(sgd, r0, dv0, dn0)
+    if row_cap is not None:
+        *out, fs = out
+        publish_fstats(fs)
+        out = tuple(out)
+    return out
 
 
 def pagerank_2d(mesh: Mesh, sg: Sharded2D, r0, params: PRParams = PRParams(),
@@ -210,5 +274,10 @@ def pagerank_2d(mesh: Mesh, sg: Sharded2D, r0, params: PRParams = PRParams(),
 
 
 def dfp_2d(mesh: Mesh, sg: Sharded2D, r_prev, dv0, dn0,
-           params: PRParams = PRParams(), trace: bool = False):
-    return _run(mesh, sg, r_prev, dv0, dn0, params, dfp=True, trace=trace)
+           params: PRParams = PRParams(), trace: bool = False,
+           row_cap: int | None = None):
+    """2-D DF-P. ``row_cap`` (static pow2) compacts each device's
+    destination loop to its mesh-row's active δ_V rows — identical ranks,
+    O(row_cap·d_p) local edge work, full-block fallback on overflow."""
+    return _run(mesh, sg, r_prev, dv0, dn0, params, dfp=True, trace=trace,
+                row_cap=row_cap)

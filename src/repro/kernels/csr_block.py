@@ -36,13 +36,26 @@ def _kernel(rowmap_ref, c_ref, tiles_ref, tmask_ref, out_ref):
 
 def csr_block_pull(c: jnp.ndarray, hi_tiles: jnp.ndarray,
                    hi_tmask: jnp.ndarray, hi_rowmap: jnp.ndarray,
-                   n_rows: int, *,
+                   n_rows: int, *, tile_sel: jnp.ndarray | None = None,
                    interpret: bool | None = None) -> jnp.ndarray:
     """out[hi_rowmap[t]] += sum(c[hi_tiles[t]] * hi_tmask[t]) for each tile t.
 
-    Returns per-high-slot sums, shape [n_rows].
+    Returns per-high-slot sums, shape [n_rows]. With `tile_sel` (a compacted
+    [k_t] active-tile list, sentinel == t_cap — core.frontier.ActiveFrontier)
+    the grid iterates over the k_t selected tiles only: the tile tables are
+    pre-gathered at `tile_sel` (dead lanes read mask 0 and accumulate 0 into
+    the pad slot) so per-call edge work is O(k_t · tile), not O(t_cap · tile).
+    Only exact when the selection covers every live tile of the rows the
+    caller reads (overflow ⇒ use the full walk).
     """
     interpret = resolve_interpret(interpret)
+    if tile_sel is not None:
+        hi_tiles = jnp.take(hi_tiles, tile_sel, axis=0, mode="fill",
+                            fill_value=0)
+        hi_tmask = jnp.take(hi_tmask, tile_sel, axis=0, mode="fill",
+                            fill_value=0.0)
+        hi_rowmap = jnp.take(hi_rowmap, tile_sel, mode="fill",
+                             fill_value=n_rows - 1)
     t_cap, tile = hi_tiles.shape
     grid = (t_cap,)
     try:

@@ -87,6 +87,7 @@ def fused_ell_update(c: jnp.ndarray, idx: jnp.ndarray, mask: jnp.ndarray,
                      aff_rows: jnp.ndarray, *, alpha: float, inv_n: float,
                      tau_f: float, tau_p: float, prune: bool,
                      closed_form: bool, vt: int = 512,
+                     active: jnp.ndarray | None = None,
                      interpret: bool | None = None):
     """One-pass pull + updateRanks over one bucket's slot table.
 
@@ -95,8 +96,22 @@ def fused_ell_update(c: jnp.ndarray, idx: jnp.ndarray, mask: jnp.ndarray,
     must carry r=1, deg=1, aff=0). Returns per-slot
     (r_new, affected', delta_n, linf_dr-scalar) — the caller scatters the
     first three back through the row-id map.
+
+    With `active` (a compacted [k] active-slot list, sentinel == cap_b —
+    core.frontier.ActiveFrontier) the kernel grid iterates over the k
+    selected slots only: all five per-slot inputs are pre-gathered at
+    `active` (dead lanes land on the inert padding discipline above) and
+    the returned vectors are [k]-shaped — the caller scatters back through
+    `blk.rows[active]`. Per-call edge work drops from O(cap_b · w_b) to
+    O(k · w_b), the frontier·degree bound.
     """
     interpret = resolve_interpret(interpret)
+    if active is not None:
+        idx = jnp.take(idx, active, axis=0, mode="fill", fill_value=0)
+        mask = jnp.take(mask, active, axis=0, mode="fill", fill_value=0.0)
+        r_rows = jnp.take(r_rows, active, mode="fill", fill_value=1.0)
+        deg_rows = jnp.take(deg_rows, active, mode="fill", fill_value=1.0)
+        aff_rows = jnp.take(aff_rows, active, mode="fill", fill_value=0.0)
     cap, w = idx.shape
     dt = c.dtype
     pad = (-cap) % vt

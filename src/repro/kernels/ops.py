@@ -43,15 +43,24 @@ def pull_sum_kernels(dg, c: jnp.ndarray, *, vt: int = 512,
 def update_ranks_kernel(dg, r: jnp.ndarray, affected: jnp.ndarray, *,
                         alpha: float, tau_f: float, tau_p: float,
                         prune: bool, closed_form: bool, track_frontier: bool,
-                        interpret: bool | None = None):
+                        active=None, interpret: bool | None = None):
     """Kernel-backed Alg. 3 body, single-pass per bucket.
 
     Same contract as core.pagerank.update_ranks. Each bucket's slot table
     goes through `fused_ell_update` (gather + epilogue in one kernel); the
     high side pulls per-slot sums through the tiled-CSR kernel and runs the
     same epilogue over the slot table. Every vertex lives in exactly one
-    bucket or one high slot, so each output is written exactly once; lanes
-    behind sentinel ids are inert and dropped on scatter-back.
+    bucket or one high slot (self-loops are guaranteed, so in-degree >= 1
+    and the d_p = 0 "one format" layout puts every vertex high-side — one
+    epilogue serves all layouts), so each output is written exactly once;
+    lanes behind sentinel ids are inert and dropped on scatter-back.
+
+    `active` (core.frontier.ActiveFrontier, valid only when its `overflow`
+    is False) restricts every kernel grid to the compacted active lists:
+    per-bucket slot lists for the ELL side, the active hi-slot/CSR-tile
+    lists for the high side. Rows off the lists keep rank/affected
+    untouched and contribute no delta_N / L-inf — identical outputs to the
+    full sweep whenever `active` covers the affected set.
     """
     interpret = default_interpret() if interpret is None else interpret
     n = r.shape[0]
@@ -61,40 +70,39 @@ def update_ranks_kernel(dg, r: jnp.ndarray, affected: jnp.ndarray, *,
     c = r / deg
     aff_f = affected.astype(dt)
 
-    if not dg.buckets:
-        # "one format" layout (d_p = 0): zero-degree rows live on neither
-        # side, so per-slot coverage is incomplete — keep the staged
-        # pull + full-width update for this configuration
-        contrib = pull_sum_kernels(dg, c, interpret=interpret)
-        r_new, aff_new, dn, dmax = pr_update(
-            contrib, r, dg.out_deg, aff_f, alpha=alpha, inv_n=inv_n,
-            tau_f=tau_f, tau_p=tau_p, prune=prune, closed_form=closed_form,
-            interpret=interpret)
-        aff_out = aff_new > 0 if prune else affected
-        dn_out = (dn > 0) if track_frontier else jnp.zeros_like(affected)
-        return r_new, aff_out, dn_out, dmax
-
     r_new = r
     aff_new_f = aff_f
     dn_f = jnp.zeros_like(aff_f)
     dmax = jnp.zeros((), dt)
-    for blk in dg.buckets:
-        rows = blk.rows
-        r_b = jnp.take(r, rows, mode="fill", fill_value=1.0)
-        d_b = jnp.take(deg, rows, mode="fill", fill_value=1.0)
-        a_b = jnp.take(aff_f, rows, mode="fill", fill_value=0.0)
+    b_sel = active.bucket_sel if active is not None \
+        else (None,) * len(dg.buckets)
+    for blk, sel in zip(dg.buckets, b_sel):
+        rows = blk.rows if sel is None \
+            else jnp.take(blk.rows, sel, mode="fill", fill_value=n)
+        r_b = jnp.take(r, blk.rows, mode="fill", fill_value=1.0)
+        d_b = jnp.take(deg, blk.rows, mode="fill", fill_value=1.0)
+        a_b = jnp.take(aff_f, blk.rows, mode="fill", fill_value=0.0)
         rb, ab, db, pb = fused_ell_update(
             c, blk.idx, blk.mask, r_b, d_b, a_b, alpha=alpha, inv_n=inv_n,
             tau_f=tau_f, tau_p=tau_p, prune=prune, closed_form=closed_form,
-            interpret=interpret)
+            active=sel, interpret=interpret)
         r_new = r_new.at[rows].set(rb, mode="drop")
         aff_new_f = aff_new_f.at[rows].set(ab, mode="drop")
         dn_f = dn_f.at[rows].set(db, mode="drop")
         dmax = jnp.maximum(dmax, pb)
 
-    hi_sums = csr_block_pull(c, dg.hi_tiles, dg.hi_tmask, dg.hi_rowmap,
-                             dg.n_hi_cap, interpret=interpret)
-    ids = dg.hi_ids
+    hi_sums = csr_block_pull(
+        c, dg.hi_tiles, dg.hi_tmask, dg.hi_rowmap, dg.n_hi_cap,
+        tile_sel=active.tile_sel if active is not None else None,
+        interpret=interpret)
+    if active is not None:
+        # epilogue over the k_h active hi slots only, scattered back through
+        # their vertex ids (sentinel lanes dropped)
+        ids = jnp.take(dg.hi_ids, active.hi_sel, mode="fill", fill_value=n)
+        hi_sums = jnp.take(hi_sums, active.hi_sel, mode="fill",
+                           fill_value=0.0)
+    else:
+        ids = dg.hi_ids
     r_h = jnp.take(r, ids, mode="fill", fill_value=1.0)
     d_h = jnp.take(deg, ids, mode="fill", fill_value=1.0)
     a_h = jnp.take(aff_f, ids, mode="fill", fill_value=0.0)

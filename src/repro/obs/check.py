@@ -41,11 +41,19 @@ def _seed_path() -> Path:
 
 
 def compare(current: dict, baseline: dict, threshold: float,
-            min_us: float) -> tuple:
-    """Returns (failures, lines): failure strings + a human diff table."""
+            min_us: float, only=()) -> tuple:
+    """Returns (failures, lines): failure strings + a human diff table.
+
+    ``only`` (name prefixes) restricts the gate to matching benchmarks on
+    both sides — for partial runs that exercised a subset of the suite
+    (e.g. test.sh gating just the frontier rows)."""
     failures, lines = [], []
-    cur = {b["name"]: b for b in current.get("benchmarks", [])}
-    base = {b["name"]: b for b in baseline.get("benchmarks", [])}
+    keep = ((lambda n: any(n.startswith(p) for p in only)) if only
+            else (lambda n: True))
+    cur = {b["name"]: b for b in current.get("benchmarks", [])
+           if keep(b["name"])}
+    base = {b["name"]: b for b in baseline.get("benchmarks", [])
+            if keep(b["name"])}
     for name, b in sorted(base.items()):
         c = cur.get(name)
         if c is None:
@@ -86,6 +94,9 @@ def main(argv=None) -> int:
                    help="ignore benches faster than this (timer noise)")
     p.add_argument("--strict", action="store_true",
                    help="fail (not warn) when the baseline file is missing")
+    p.add_argument("--only", action="append", default=[],
+                   help="gate only benchmarks whose name starts with this "
+                        "prefix (repeatable); default: all")
     args = p.parse_args(argv)
 
     if (args.baseline is None) == (args.against is None):
@@ -117,7 +128,8 @@ def main(argv=None) -> int:
         print(f"error: cannot read baseline: {e}", file=sys.stderr)
         return 2
 
-    failures, lines = compare(current, baseline, args.threshold, args.min_us)
+    failures, lines = compare(current, baseline, args.threshold, args.min_us,
+                              only=tuple(args.only))
     print(f"repro.obs.check: {args.current} vs {base_path} "
           f"(threshold +{args.threshold * 100:.0f}%)")
     for ln in lines:

@@ -33,8 +33,10 @@ import numpy as np
 from ..core.compact import df_pagerank_compact, dfp_pagerank_compact
 from ..core.distributed import (distributed_dfp_pagerank,
                                 distributed_static_pagerank,
-                                initial_affected_sharded)
+                                initial_affected_sharded,
+                                sharded_frontier_caps)
 from ..core.dynamic import df_pagerank, dfp_pagerank
+from ..core.frontier import caps_for, merge_caps
 from ..core.graph import BatchUpdate, Graph
 from ..core.pagerank import PRParams, init_ranks, static_pagerank
 from ..obs.spans import get_registry as _obs
@@ -43,13 +45,23 @@ from .delta import Delta, ingest
 from .sharded import ShardedSnapshot
 from .snapshot import DeviceSnapshot, SnapshotStats
 
-__all__ = ["StreamSession", "BatchStats", "choose_engine"]
+__all__ = ["StreamSession", "BatchStats", "choose_engine",
+           "frontier_estimate"]
+
+
+def frontier_estimate(delta: Delta, outdeg: np.ndarray) -> int:
+    """Initial-frontier size estimate of Δ^t (paper Alg. 5: the first
+    expansion marks the out-neighbors of every updated source, plus every
+    deletion target) — the one number engine choice and frontier capacity
+    planning both key off."""
+    srcs = np.unique(np.concatenate([delta.del_src, delta.ins_src]))
+    return int(srcs.size) + int(outdeg[srcs].sum()) + int(delta.del_dst.size)
 
 
 def choose_engine(delta: Delta, outdeg: np.ndarray, n: int,
                   threshold: float) -> str:
-    """Dense vs compact, from the *initial frontier estimate* (paper Alg. 5:
-    the first expansion marks the out-neighbors of every updated source).
+    """Dense vs compact, from the *initial frontier estimate*
+    (`frontier_estimate`).
 
     The compact engine sizes its capacity K ≈ 16 · initial frontier and its
     per-iteration cost scales with K; once K approaches |V| it is strictly a
@@ -58,8 +70,7 @@ def choose_engine(delta: Delta, outdeg: np.ndarray, n: int,
     fraction of |V| — the oversized case would fall back to dense *inside*
     the compact driver anyway, this skips the detour.
     """
-    srcs = np.unique(np.concatenate([delta.del_src, delta.ins_src]))
-    est = int(srcs.size) + int(outdeg[srcs].sum()) + int(delta.del_dst.size)
+    est = frontier_estimate(delta, outdeg)
     return "compact" if est <= threshold * n else "dense"
 
 
@@ -128,6 +139,12 @@ class StreamSession:
                 g, d_p=d_p, tile=tile, **snap_kw)
         self.ranks, self._init_iters = self._static_solve()
         self.history: List[BatchStats] = []
+        #: never-shrink FrontierCaps across the stream (None until the first
+        #: compacted batch). Growing a capacity re-traces the engine once;
+        #: keeping the running elementwise max means a burst batch can only
+        #: ever grow it, so the jit cache stays warm for the rest of the
+        #: stream (zero recompiles after the high-water mark).
+        self._caps = None
 
     @property
     def n(self) -> int:
@@ -155,13 +172,15 @@ class StreamSession:
         t1 = time.perf_counter()
         engine = self._choose_engine(delta)
         obs.inc(f"session.engine.{engine}")
+        caps = self._frontier_caps(frontier_estimate(delta,
+                                                     self.snap._outdeg))
         with obs.span("session.solve", annotate=True):
             if engine == "sharded":
                 dv0, dn0 = initial_affected_sharded(
                     self.snap.nd, self.snap.n_loc, db)
                 out = distributed_dfp_pagerank(
                     self.mesh, self.snap.sg, self.ranks, dv0, dn0,
-                    self.params, trace=self.trace)
+                    self.params, trace=self.trace, frontier_caps=caps)
             elif engine == "compact":
                 fn = (dfp_pagerank_compact if self.prune
                       else df_pagerank_compact)
@@ -170,7 +189,7 @@ class StreamSession:
             else:
                 fn = dfp_pagerank if self.prune else df_pagerank
                 out = fn(self.snap, self.ranks, db, self.params,
-                         trace=self.trace)
+                         trace=self.trace, frontier_caps=caps)
             (r, iters), summary = maybe_summary(out, self.trace)
             r = jax.block_until_ready(r)
         solve_s = time.perf_counter() - t1
@@ -181,6 +200,20 @@ class StreamSession:
             ingest_s=ingest_s, snapshot=snap_stats, solve_s=solve_s,
             trace=summary))
         return r
+
+    def _frontier_caps(self, est: int):
+        """Frontier capacity plan for this batch — the running elementwise
+        max over the stream (never-shrink), so capacities only grow at a
+        new high-water mark and the engine's jit cache survives every batch
+        below it. `frontier.caps_growth` counts the (re-tracing) growth
+        events."""
+        new = (sharded_frontier_caps(self.snap.sg, est)
+               if self.mesh is not None else caps_for(self.snap.dg, est))
+        merged = merge_caps(self._caps, new)
+        if self._caps is not None and merged != self._caps:
+            _obs().inc("frontier.caps_growth")
+        self._caps = merged
+        return merged
 
     def _choose_engine(self, delta: Delta) -> str:
         if self.mesh is not None:

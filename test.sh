@@ -7,3 +7,16 @@ REPO_DIR="$(cd "$(dirname "${BASH_SOURCE[0]}")" && pwd)"
 export PYTHONPATH="${REPO_DIR}/src${PYTHONPATH:+:$PYTHONPATH}"
 
 /usr/bin/env python3 -m pytest -x -q "$@"
+
+# Bench regression gate (smoke frontier bench vs the committed seed; +200%
+# because hosts differ — catastrophic-only, like CI). Opt out with
+# REPRO_SKIP_BENCH_GATE=1 for pure unit-test iterations.
+if [[ "${REPRO_SKIP_BENCH_GATE:-0}" != "1" && $# -eq 0 ]]; then
+  BENCH_OUT="$(mktemp -t bench_gate.XXXXXX.json)"
+  trap 'rm -f "${BENCH_OUT}"' EXIT
+  (cd "${REPO_DIR}" && /usr/bin/env python3 -m benchmarks.run frontier \
+      --smoke --name test-sh-gate --out "${BENCH_OUT}" --pr-json '' \
+      >/dev/null)
+  /usr/bin/env python3 -m repro.obs.check "${BENCH_OUT}" --against seed \
+      --threshold 2.0 --only frontier/
+fi

@@ -201,9 +201,38 @@ def test_d_p_zero_all_csr_parity():
     r0 = init_ranks(g.n)
     r, _ = static_pagerank(dg, r0)
     assert l1_error(np.asarray(r), reference_pagerank(g)) < 1e-5
-    # the fused kernel path falls back to staged pull + full-width update
+    # self-loops guarantee indeg >= 1, so d_p=0 puts every vertex high-side
+    # and the kernel runs the SAME hi-slot epilogue as every other layout
+    # (the bespoke staged fallback is gone)
     aff = jnp.ones(g.n, jnp.bool_)
     ra, _, _, da = update_ranks(dg, r0, aff, **STEP)
     rb, _, _, db_ = update_ranks_kernel(dg, r0, aff, **STEP)
     assert _linf(ra, rb) <= TOL
     assert abs(float(da) - float(db_)) <= TOL
+
+
+# ---------------------------------------------------------------------------
+# frontier-compacted kernel sweeps (PR 8): active lists == full sweep
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("d_p", [D_P, 0])
+def test_update_ranks_kernel_active_parity(d_p):
+    """`update_ranks_kernel(active=...)` must be bit-identical to its own
+    full sweep (and the non-kernel engine path) on both the bucketed and
+    the d_p=0 all-CSR layouts — the same epilogue runs over compacted
+    active-slot lists instead of every slot."""
+    from repro.core import active_frontier, caps_for
+    g = powerlaw_graph(250, 2000, seed=17)
+    dg = to_device(build_hybrid(g, d_p=d_p, tile=TILE))
+    rng = np.random.default_rng(18)
+    r = jnp.asarray(rng.random(g.n) / g.n + 1.0 / g.n)
+    dv = jnp.asarray(rng.random(g.n) < 0.08)
+    caps = caps_for(dg, int(jnp.sum(dv)))
+    af = active_frontier(dg.buckets, dg.hi_ids, dg.hi_rowmap, dv, caps)
+    assert not bool(af.overflow)
+    full = update_ranks_kernel(dg, r, dv, **STEP)
+    act = update_ranks_kernel(dg, r, dv, active=af, **STEP)
+    ref = update_ranks(dg, r, dv, **STEP)
+    for a, b, c in zip(full, act, ref):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert _linf(b, c) <= TOL

@@ -1,0 +1,184 @@
+"""Unit tests for core.frontier: stream compaction, capacity plans, active
+lists, push expansion, and the fstats counters (PR 8 tentpole machinery)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (FrontierCaps, active_frontier, caps_for,
+                        device_graph, expand_affected, expand_frontier,
+                        forward_device_graph, init_ranks, merge_caps,
+                        plan_capacity, powerlaw_graph, push_expand,
+                        random_graph, stream_compact, update_ranks_active)
+from repro.core.frontier import (FS_COMPACT, FS_ITERS, fstats_init,
+                                 publish_fstats)
+from repro.core.pagerank import update_ranks
+from repro.obs.spans import Registry
+
+CAPS = dict(d_p=8, tile=32)
+STEP = dict(alpha=0.85, tau_f=1e-6, tau_p=1e-6, prune=True,
+            closed_form=True, track_frontier=True)
+
+
+# ---------------------------------------------------------------------------
+# stream_compact
+# ---------------------------------------------------------------------------
+
+def test_stream_compact_matches_flatnonzero():
+    rng = np.random.default_rng(0)
+    flags = rng.random(517) < 0.13
+    want = np.flatnonzero(flags)
+    idx, cnt = stream_compact(jnp.asarray(flags), 128, fill=999)
+    assert int(cnt) == want.size
+    np.testing.assert_array_equal(np.asarray(idx)[:want.size], want)
+    assert np.all(np.asarray(idx)[want.size:] == 999)
+
+
+def test_stream_compact_truncates_and_reports_overflow():
+    flags = jnp.ones(100, jnp.bool_)
+    idx, cnt = stream_compact(flags, 16, fill=100)
+    assert int(cnt) == 100          # count is exact even when k overflows
+    np.testing.assert_array_equal(np.asarray(idx), np.arange(16))
+
+
+def test_stream_compact_k_exceeds_input_length():
+    flags = jnp.asarray([True, False, True])
+    idx, cnt = stream_compact(flags, 8, fill=3)
+    assert int(cnt) == 2
+    np.testing.assert_array_equal(np.asarray(idx), [0, 2, 3, 3, 3, 3, 3, 3])
+
+
+def test_stream_compact_empty_flags():
+    idx, cnt = stream_compact(jnp.zeros(64, jnp.bool_), 8, fill=64)
+    assert int(cnt) == 0
+    assert np.all(np.asarray(idx) == 64)
+
+
+# ---------------------------------------------------------------------------
+# capacity plans
+# ---------------------------------------------------------------------------
+
+def test_plan_capacity_pow2_and_clamped():
+    assert plan_capacity(10, 1 << 20) == 256          # 10*16 -> 160 -> 256
+    assert plan_capacity(0, 1 << 20) == 16            # est floor of 1
+    assert plan_capacity(10, 100) == 128              # clamp: next_pow2(n)
+    assert plan_capacity(7, 1 << 20, headroom=2) == 16
+
+
+def test_caps_for_clamps_to_layout_shapes():
+    g = powerlaw_graph(500, 4000, seed=1)
+    dg = device_graph(g, **CAPS)
+    caps = caps_for(dg, est=3)
+    for c, blk in zip(caps.bucket, dg.buckets):
+        assert c <= int(blk.rows.shape[0])
+    assert caps.hi <= dg.n_hi_cap
+    assert caps.tiles <= int(dg.hi_tiles.shape[0])
+    hash(caps)                      # must stay a valid jit static argument
+
+
+def test_merge_caps_never_shrinks():
+    a = FrontierCaps(bucket=(8, 4), hi=16, tiles=8, dn=32)
+    b = FrontierCaps(bucket=(4, 16), hi=8, tiles=64, dn=16)
+    m = merge_caps(a, b)
+    assert m == FrontierCaps(bucket=(8, 16), hi=16, tiles=64, dn=32)
+    assert merge_caps(None, b) == b
+
+
+# ---------------------------------------------------------------------------
+# active_frontier / update_ranks_active
+# ---------------------------------------------------------------------------
+
+def _setup(seed=2, n=400, m=3200):
+    g = powerlaw_graph(n, m, seed=seed)
+    dg = device_graph(g, **CAPS)
+    rng = np.random.default_rng(seed + 1)
+    dv = jnp.asarray(rng.random(n) < 0.05)
+    return g, dg, dv
+
+
+def test_active_frontier_lists_cover_exactly_the_affected_rows():
+    _, dg, dv = _setup()
+    caps = caps_for(dg, int(jnp.sum(dv)))
+    af = active_frontier(dg.buckets, dg.hi_ids, dg.hi_rowmap, dv, caps)
+    assert not bool(af.overflow)
+    got = set()
+    for blk, sel, cnt in zip(dg.buckets, af.bucket_sel, af.bucket_counts):
+        slots = np.asarray(sel)[:int(cnt)]
+        got |= set(np.asarray(blk.rows)[slots].tolist())
+    hi = np.asarray(af.hi_sel)
+    hi = hi[hi < dg.n_hi_cap]
+    got |= set(np.asarray(dg.hi_ids)[hi].tolist())
+    want = set(np.flatnonzero(np.asarray(dv)).tolist())
+    assert got == want
+    assert int(af.n_rows) == len(want)
+
+
+def test_active_frontier_overflow_on_tiny_caps():
+    _, dg, dv = _setup()
+    caps = FrontierCaps(bucket=(1,) * len(dg.buckets), hi=1, tiles=1, dn=1)
+    af = active_frontier(dg.buckets, dg.hi_ids, dg.hi_rowmap, dv, caps)
+    assert bool(af.overflow)
+
+
+def test_update_ranks_active_matches_dense_sweep():
+    _, dg, dv = _setup(seed=5)
+    r = init_ranks(dg.n)
+    caps = caps_for(dg, int(jnp.sum(dv)))
+    af = active_frontier(dg.buckets, dg.hi_ids, dg.hi_rowmap, dv, caps)
+    assert not bool(af.overflow)
+    dense = update_ranks(dg, r, dv, **STEP)
+    act = update_ranks_active(dg, r, dv, af, **STEP)
+    for a, b in zip(dense, act):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# push expansion
+# ---------------------------------------------------------------------------
+
+def test_push_expand_matches_dense_pull_expansion():
+    g, dg, _ = _setup(seed=7)
+    fwd = forward_device_graph(g, **CAPS)
+    rng = np.random.default_rng(8)
+    dn = jnp.asarray(rng.random(g.n) < 0.03)
+    kn = plan_capacity(int(jnp.sum(dn)), g.n, headroom=4)
+    marks, ovf = push_expand(fwd, dn, kn)
+    assert not bool(ovf)
+    want = expand_affected(dg, jnp.zeros(g.n, jnp.bool_), dn)
+    np.testing.assert_array_equal(np.asarray(marks), np.asarray(want))
+
+
+def test_push_expand_overflow_flag():
+    g, _, _ = _setup(seed=9)
+    fwd = forward_device_graph(g, **CAPS)
+    dn = jnp.ones(g.n, jnp.bool_)
+    _, ovf = push_expand(fwd, dn, kn=4)
+    assert bool(ovf)
+
+
+def test_expand_frontier_equals_dense_both_sides_of_overflow():
+    g, dg, _ = _setup(seed=11)
+    fwd = forward_device_graph(g, **CAPS)
+    rng = np.random.default_rng(12)
+    dv = jnp.asarray(rng.random(g.n) < 0.02)
+    dn = jnp.asarray(rng.random(g.n) < 0.04)
+    want = expand_affected(dg, dv, dn)
+    for caps in (caps_for(dg, g.n),                      # compacted path
+                 FrontierCaps(bucket=(1,) * len(dg.buckets), hi=1,
+                              tiles=1, dn=1)):           # overflow fallback
+        got, stats = expand_frontier(dg, fwd, dv, dn, caps)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+        assert stats.shape == (3,)
+
+
+# ---------------------------------------------------------------------------
+# fstats
+# ---------------------------------------------------------------------------
+
+def test_publish_fstats_lands_in_registry():
+    fs = fstats_init(2)
+    fs = fs.at[FS_ITERS].add(5).at[FS_COMPACT].add(4)
+    reg = Registry()
+    publish_fstats(fs, registry=reg)
+    assert reg.counter("frontier.iters") == 5
+    assert reg.counter("frontier.compact_iters") == 4

@@ -7,9 +7,13 @@ import pytest
 hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
-from repro.core import (BatchUpdate, apply_batch, build_graph, device_graph,
-                        init_ranks, pull_sum, random_graph, static_pagerank)
+from repro.core import (BatchUpdate, FrontierCaps, apply_batch, batch_to_device,
+                        build_graph, caps_for, device_graph, dfp_pagerank,
+                        forward_device_graph, init_ranks, pull_sum,
+                        random_batch, random_graph, static_pagerank)
+from repro.core.pagerank import PRParams
 from repro.core.partition import partition_by_degree
+from repro.kernels.ref import pr_update_ref
 from repro.roofline.analysis import collective_bytes
 
 SETTINGS = dict(max_examples=25, deadline=None)
@@ -83,6 +87,70 @@ def test_apply_batch_monotone_edges(ins, dels, seed):
     assert np.all(g2.out_degree() >= 1)
     for u, v in zip(b.ins_src, b.ins_dst):
         assert g2.has_edge(int(u), int(v))
+
+
+def _dfp_oracle(g, r0, batch, params):
+    """DF-P in plain numpy + the kernels/ref.py update oracle, mirroring
+    `core.dynamic._df_like`: initial affected -> initial expansion -> loop
+    of (expand previous frontier, pr_update_ref sweep) until L_inf <= tau."""
+    n = g.n
+    A = np.zeros((n, n))
+    src, dst = g.edges()
+    A[src, dst] = 1.0
+    outdeg = g.out_degree().astype(np.float64)
+    dv = np.zeros(n, bool)
+    dn = np.zeros(n, bool)
+    dv[np.asarray(batch.del_dst)] = True
+    dn[np.asarray(batch.del_src)] = True
+    dn[np.asarray(batch.ins_src)] = True
+    dv |= A[dn].sum(axis=0) > 0           # initial expansion (Alg. 2 line 9)
+    dn = np.zeros(n, bool)
+    r = np.asarray(r0, np.float64)
+    delta, i = np.inf, 0
+    while delta > params.tau and i < params.max_iter:
+        if i > 0:
+            dv = dv | (A[dn].sum(axis=0) > 0)
+        contrib = A.T @ (r / outdeg)
+        r_new, aff, dn_f, dmax = pr_update_ref(
+            contrib, r, outdeg, dv.astype(np.float64), alpha=params.alpha,
+            inv_n=1.0 / n, tau_f=params.tau_f, tau_p=params.tau_p,
+            prune=True, closed_form=True)
+        r = np.asarray(r_new)
+        dv = np.asarray(aff) > 0
+        dn = np.asarray(dn_f) > 0
+        delta = float(dmax)
+        i += 1
+    return r, i
+
+
+@given(n=st.integers(20, 80), seed=st.integers(0, 99))
+@settings(max_examples=8, deadline=None)
+def test_dfp_compacted_equals_dense_equals_ref(n, seed):
+    """Compacted DF-P == dense DF-P == the kernels/ref.py numpy oracle at
+    1e-12 L_inf, including overflow-forcing tiny capacities (PR 8)."""
+    params = PRParams(tau=1e-10, tau_f=1e-9, tau_p=1e-9, max_iter=100)
+    g = random_graph(n, 4 * n, seed=seed)
+    dg = device_graph(g, d_p=4, tile=16)
+    r_prev, _ = static_pagerank(dg, init_ranks(n), params)
+    b = random_batch(g, 0.1, seed=seed + 1)
+    g2 = apply_batch(g, b)
+    dg2 = device_graph(g2, d_p=4, tile=16)
+    fwd2 = forward_device_graph(g2, d_p=4, tile=16)
+    db = batch_to_device(b, g2.n)
+
+    r_dense, it_dense = dfp_pagerank(dg2, r_prev, db, params)
+    roomy = caps_for(dg2, n)
+    tiny = FrontierCaps(bucket=(1,) * len(dg2.buckets), hi=1, tiles=1, dn=1)
+    outs = {}
+    for tag, caps in (("roomy", roomy), ("tiny", tiny)):
+        r_c, it_c = dfp_pagerank(dg2, r_prev, db, params, fwd=fwd2,
+                                 frontier_caps=caps)
+        assert int(it_c) == int(it_dense), tag
+        outs[tag] = np.max(np.abs(np.asarray(r_c) - np.asarray(r_dense)))
+        assert outs[tag] <= 1e-12, (tag, outs[tag])
+    r_ref, it_ref = _dfp_oracle(g2, r_prev, b, params)
+    assert int(it_ref) == int(it_dense)
+    assert np.max(np.abs(np.asarray(r_dense) - r_ref)) <= 1e-12
 
 
 def test_collective_bytes_parser():
