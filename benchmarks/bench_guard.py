@@ -1,0 +1,155 @@
+"""BENCH: guard-layer overhead + recovery latency (ISSUE 9).
+
+The fault-tolerance layer must be near-free when nothing is wrong: on a
+healthy stream the only additions are O(|Δ|) host-side validation, one
+fused health reduction inside each jitted solve, and (journaled sessions)
+one buffered append per batch. This bench measures exactly that, plus the
+price of each recovery path when something IS wrong:
+
+  guard/stream-unguarded   per-batch apply, ``guard=None`` (the baseline)
+  guard/stream-guarded     per-batch apply, ``GuardConfig()`` — derived
+                           ``overhead=`` % vs unguarded (acceptance: < 2%)
+  guard/stream-journaled   guarded + write-ahead journal + periodic
+                           checkpoints — the full crash-recovery config
+  guard/recover-maxiter    one batch under a starved solve budget: watchdog
+                           fires, ladder retries at full budget (rungs=)
+  guard/recover-nan        one batch from NaN-poisoned ranks: nonfinite
+                           bit fires after ONE sweep, ladder walks to the
+                           static-recompute rung (rungs=)
+  guard/restore            StreamSession.restore — checkpoint load + journal
+                           replay back to bit-identical state (replayed=)
+
+Timings are min-of-reps over full stream replays (sessions are stateful;
+a batch cannot be re-applied in place), interleaved per rep so scheduler
+noise hits both configurations equally.
+"""
+from __future__ import annotations
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import shutil
+import tempfile
+import time
+
+import numpy as np
+
+from repro.core import temporal_stream
+from repro.guard import ChaosMonkey, GuardConfig
+from repro.stream import StreamSession
+from .common import emit, smoke
+
+N = 20_000
+EDGES = 300_000
+BATCH = 256
+N_BATCHES = 16
+REPS = 3
+CAPS = dict(d_p=64, tile=256)
+
+
+def _stream_time(base, batches, **sess_kw):
+    """Wall-clock for one full stream replay; returns (seconds, session)."""
+    sess = StreamSession(base, **CAPS, **sess_kw)
+    t0 = time.perf_counter()
+    for b in batches:
+        sess.apply(b)
+    jax.block_until_ready(sess.ranks)
+    return time.perf_counter() - t0, sess
+
+
+def run(n=N, edges=EDGES):
+    batch, n_batches, reps = BATCH, N_BATCHES, REPS
+    if smoke():
+        n, edges, batch, n_batches, reps = 4_000, 40_000, 64, 8, 3
+    base, raw = temporal_stream(n, edges, n_batches=1000, seed=7)
+    src = np.concatenate([b.ins_src for b in raw])
+    dst = np.concatenate([b.ins_dst for b in raw])
+    from repro.core import BatchUpdate
+    batches = []
+    off = 0
+    for _ in range(n_batches):
+        batches.append(BatchUpdate(
+            del_src=np.zeros(0, np.int32), del_dst=np.zeros(0, np.int32),
+            ins_src=src[off:off + batch], ins_dst=dst[off:off + batch]))
+        off += batch
+
+    # -- healthy-stream overhead (interleaved reps; rep 0 = jit warmup) ------
+    configs = {
+        "unguarded": dict(),
+        "guarded": dict(guard=GuardConfig()),
+    }
+    jdirs = {}
+    best = {k: float("inf") for k in configs}
+    best["journaled"] = float("inf")
+    for rep in range(reps + 1):
+        for key, kw in configs.items():
+            dt, _ = _stream_time(base, batches, **kw)
+            if rep > 0:
+                best[key] = min(best[key], dt)
+        jdir = tempfile.mkdtemp(prefix="bench_guard_")
+        dt, sess_j = _stream_time(base, batches, guard=GuardConfig(),
+                                  journal_dir=jdir,
+                                  checkpoint_every=max(2, n_batches // 2))
+        sess_j.close()
+        if rep > 0:
+            best["journaled"] = min(best["journaled"], dt)
+            jdirs[rep] = jdir
+        else:
+            shutil.rmtree(jdir)
+
+    per_batch = {k: v / n_batches * 1e6 for k, v in best.items()}
+    emit("guard/stream-unguarded", per_batch["unguarded"],
+         f"batches={n_batches} batch={batch}")
+    for key in ("guarded", "journaled"):
+        ovh = 100.0 * (best[key] - best["unguarded"]) / best["unguarded"]
+        emit(f"guard/stream-{key}", per_batch[key],
+             f"overhead={ovh:.2f}% batches={n_batches}")
+
+    # -- recovery latency ----------------------------------------------------
+    chaos = ChaosMonkey(seed=5)
+
+    def recover_maxiter():
+        sess = StreamSession(base, **CAPS, guard=GuardConfig())
+        chaos.force_nonconvergence(sess)
+        t0 = time.perf_counter()
+        sess.apply(batches[0])
+        jax.block_until_ready(sess.ranks)
+        return time.perf_counter() - t0, sess.history[-1]
+
+    def recover_nan():
+        sess = StreamSession(base, **CAPS, guard=GuardConfig())
+        sess.ranks = chaos.poison_ranks(sess.ranks, mode="nan", k=1, idx=[7])
+        t0 = time.perf_counter()
+        sess.apply(batches[0])
+        jax.block_until_ready(sess.ranks)
+        return time.perf_counter() - t0, sess.history[-1]
+
+    for name, fn in (("recover-maxiter", recover_maxiter),
+                     ("recover-nan", recover_nan)):
+        ts, st = [], None
+        for rep in range(reps + 1):  # rep 0 warms the recovery-rung jits
+            dt, st = fn()
+            if rep > 0:
+                ts.append(dt)
+        assert st is not None and st.health != 0 and st.escalations >= 1, st
+        emit(f"guard/{name}", min(ts) * 1e6,
+             f"rungs={st.escalations} health={st.health}")
+
+    # -- crash restore (newest journaled run from the overhead loop) ---------
+    jdir = jdirs[max(jdirs)]
+    ts = []
+    replayed = n_batches - max(2, n_batches // 2)
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        sess = StreamSession.restore(jdir)
+        jax.block_until_ready(sess.ranks)
+        ts.append(time.perf_counter() - t0)
+        sess.close()
+    emit("guard/restore", min(ts) * 1e6, f"replayed={replayed}")
+    for d in jdirs.values():
+        shutil.rmtree(d, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    run()

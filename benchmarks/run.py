@@ -12,6 +12,8 @@
                        static + streamed DF-P; forced host mesh, subprocess)
   (beyond paper)    -> bench_frontier    (frontier-compacted active step vs
                        dense full sweep: density sweep + stream retraces)
+  (beyond paper)    -> bench_guard       (guard-layer overhead on healthy
+                       streams + recovery/restore latency)
 
 Prints ``name,us_per_call,derived`` CSV rows (unchanged format) and writes
 the structured twin — a ``repro.obs/bench-v1`` RunReport with per-record
@@ -31,7 +33,7 @@ from pathlib import Path
 
 #: root-level per-PR perf snapshot (repro.obs/bench-v1, same payload as
 #: --out) — the PR number tracks the repo's perf trajectory in-tree.
-PR_JSON = Path(__file__).resolve().parents[1] / "BENCH_8.json"
+PR_JSON = Path(__file__).resolve().parents[1] / "BENCH_9.json"
 
 
 def main(argv=None) -> int:
@@ -58,12 +60,12 @@ def main(argv=None) -> int:
 
     from . import (bench_static, bench_dynamic, bench_sweep, bench_partition,
                    bench_fusion, bench_layout, bench_stream,
-                   bench_distributed, bench_frontier)
+                   bench_distributed, bench_frontier, bench_guard)
     mods = {"static": bench_static, "dynamic": bench_dynamic,
             "sweep": bench_sweep, "partition": bench_partition,
             "fusion": bench_fusion, "layout": bench_layout,
             "stream": bench_stream, "distributed": bench_distributed,
-            "frontier": bench_frontier}
+            "frontier": bench_frontier, "guard": bench_guard}
     unknown = [k for k in args.keys if k not in mods]
     if unknown:
         ap.error(f"unknown bench keys {unknown}; choose from {list(mods)}")

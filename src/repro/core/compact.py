@@ -27,7 +27,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from .dynamic import DeviceBatch, _loop
+from .dynamic import DeviceBatch, _loop, solve_health
 from .frontier import (FrontierCaps, active_frontier, initial_affected,
                        plan_capacity, push_expand, update_ranks_active)
 from .graph import Graph, build_hybrid
@@ -120,7 +120,7 @@ def _compact_loop(dg: DeviceGraph, fwd: DeviceGraph, r0, dv0, dn0,
 
 def _df_like_compact(dg, fwd, r_prev, batch: DeviceBatch,
                      params: PRParams, *, prune: bool, headroom: int = 16,
-                     trace: bool = False):
+                     trace: bool = False, health: bool = False):
     n = dg.n
     dv, dn = initial_affected(n, batch.del_src, batch.del_dst, batch.ins_src)
     # initial marking via the compacted out-edge walk (paper Alg. 5), not a
@@ -140,21 +140,35 @@ def _df_like_compact(dg, fwd, r_prev, batch: DeviceBatch,
     r, dv, dn, delta, iters, tb = _compact_loop(dg, fwd, r_prev, dv, dn0,
                                                 params, k, kt, kn, prune,
                                                 trace)
+    hw = None
     if float(delta) > params.tau and int(iters) < params.max_iter:
         # frontier outgrew the capacity: dense engine finishes the job,
-        # appending to the same trace buffer at offset `iters`
+        # appending to the same trace buffer at offset `iters`. Its health
+        # word (budget = the REMAINING iterations) is the solve's health
+        # word: exhausting `rest` is exactly exhausting the total budget.
         rest = params._replace(max_iter=params.max_iter - int(iters))
-        out = _dense_finish(dg, r, dv, dn, rest, prune, tb,
-                            jnp.asarray(int(iters), jnp.int32))
-        r, it2, tb = out if trace else (*out, None)
+        out = list(_dense_finish(dg, r, dv, dn, rest, prune, tb,
+                                 jnp.asarray(int(iters), jnp.int32), health))
+        if health:
+            hw = out.pop()
+        r, it2 = out[0], out[1]
+        tb = out[2] if trace else None
         iters = iters + it2
-    return (r, iters, tb) if trace else (r, iters)
+    elif health:
+        hw = solve_health(delta, iters, jnp.sum(r), params)
+    res = [r, iters]
+    if trace:
+        res.append(tb)
+    if health:
+        res.append(hw)
+    return tuple(res) if trace or health else (r, iters)
 
 
-@functools.partial(jax.jit, static_argnames=("params", "prune"))
-def _dense_finish(dg, r, dv, dn, params, prune, tb=None, i_off=0):
+@functools.partial(jax.jit, static_argnames=("params", "prune", "health"))
+def _dense_finish(dg, r, dv, dn, params, prune, tb=None, i_off=0,
+                  health: bool = False):
     return _loop(dg, r, dv, dn, params, expand=True, prune=prune,
-                 closed_form=prune, tb=tb, i_off=i_off)
+                 closed_form=prune, tb=tb, i_off=i_off, health=health)
 
 
 def _stage_pair(dg, fwd):
@@ -172,16 +186,16 @@ def _stage_pair(dg, fwd):
 def dfp_pagerank_compact(dg, fwd=None, r_prev=None,
                          batch: DeviceBatch = None,
                          params: PRParams = PRParams(),
-                         trace: bool = False):
+                         trace: bool = False, health: bool = False):
     dg, fwd = _stage_pair(dg, fwd)
     return _df_like_compact(dg, fwd, r_prev, batch, params, prune=True,
-                            trace=trace)
+                            trace=trace, health=health)
 
 
 def df_pagerank_compact(dg, fwd=None, r_prev=None,
                         batch: DeviceBatch = None,
                         params: PRParams = PRParams(),
-                        trace: bool = False):
+                        trace: bool = False, health: bool = False):
     dg, fwd = _stage_pair(dg, fwd)
     return _df_like_compact(dg, fwd, r_prev, batch, params, prune=False,
-                            trace=trace)
+                            trace=trace, health=health)

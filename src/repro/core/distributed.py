@@ -33,6 +33,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
+from .dynamic import solve_health
 from .frontier import (FS_ACTIVE_ROWS, FS_ACTIVE_TILES, FS_COMPACT, FS_ITERS,
                        FS_NB, FS_OVERFLOW, active_frontier, active_pull_sum,
                        caps_for_parts, fstats_init, initial_affected,
@@ -319,7 +320,8 @@ def _squeeze_shard(sgd: dict) -> dict:
 
 def _make_loop(axis, params: PRParams, n_true: int, *, dfp: bool,
                compact_frontier: bool = False, delta_every: int = 1,
-               trace: bool = False, frontier_caps=None):
+               trace: bool = False, frontier_caps=None,
+               health: bool = False):
     """Build the per-shard while-loop body. `axis` is the (tuple of) mesh
     axis name(s) the vertex dimension is sharded over.
 
@@ -423,10 +425,17 @@ def _make_loop(axis, params: PRParams, n_true: int, *, dfp: bool,
         nb = len(sgl["buckets"])
         init = (r0, dv0, dn0, jnp.asarray(jnp.inf, dt),
                 jnp.asarray(0, jnp.int32), tb0, fstats_init(nb))
-        r, dv, dn, _, iters, tb, fs = jax.lax.while_loop(cond, body, init)
+        r, dv, dn, delta, iters, tb, fs = jax.lax.while_loop(cond, body, init)
         out = [r[None], iters]
         if trace:
             out.append(tb)
+        if health:
+            # guard.health word, replicated: delta came through pmax, the
+            # mass is one extra psum over the valid slice. A delta left at
+            # the inf skip-sentinel (delta_every>1 exhausting the budget
+            # between checks) clamps to H_MAX_ITER inside solve_health.
+            mass = jax.lax.psum(jnp.sum(jnp.where(valid, r, 0)), axis)
+            out.append(solve_health(delta, iters, mass, params))
         if frontier_caps is not None:
             out.append(jax.lax.psum(fs, axis))
         return tuple(out)
@@ -448,19 +457,25 @@ def pagerank_step_specs(mesh: Mesh):
 
 def distributed_static_pagerank(mesh: Mesh, sg: ShardedGraph, r0: jnp.ndarray,
                                 params: PRParams = PRParams(),
-                                delta_every: int = 1, trace: bool = False):
+                                delta_every: int = 1, trace: bool = False,
+                                health: bool = False):
     """r0: [nd, n_loc] stacked ranks. Returns (ranks [nd, n_loc], iters),
-    plus a replicated obs.trace.TraceBuffer when ``trace=True``."""
+    plus a replicated obs.trace.TraceBuffer when ``trace=True`` and a
+    replicated guard.health word (last) when ``health=True``."""
     axis, shard = _specs(mesh)
     nd, n_loc = sg.out_deg.shape
     on = jnp.ones((nd, n_loc), jnp.bool_)
     off = jnp.zeros((nd, n_loc), jnp.bool_)
     loop = _make_loop(axis, params, sg.n_true, dfp=False,
-                      delta_every=delta_every, trace=trace)
-    out_specs = (shard, P(), P()) if trace else (shard, P())
+                      delta_every=delta_every, trace=trace, health=health)
+    out_specs = [shard, P()]
+    if trace:
+        out_specs.append(P())
+    if health:
+        out_specs.append(P())
     fn = shard_map_loop(loop, mesh,
                         ({k: shard for k in _FIELDS}, shard, shard, shard),
-                        out_specs)
+                        tuple(out_specs))
     return jax.jit(fn)(_as_dict(sg), r0, on, off)
 
 
@@ -480,21 +495,25 @@ def distributed_dfp_pagerank(mesh: Mesh, sg: ShardedGraph, r_prev: jnp.ndarray,
                              dv0: jnp.ndarray, dn0: jnp.ndarray,
                              params: PRParams = PRParams(),
                              delta_every: int = 1, trace: bool = False,
-                             frontier_caps=None):
+                             frontier_caps=None, health: bool = False):
     """DF-P on the cluster: dv0/dn0 are the initial affected / to-expand
     flags ([nd, n_loc], from `initial_affected_sharded`). Iteration 0 pulls
     dn0 through the layout — the paper's initial frontier expansion — so
     callers seed raw flags; pre-expanded dv0 (with dn0 zeroed) also works.
-    ``trace=True`` appends a replicated obs.trace.TraceBuffer.
+    ``trace=True`` appends a replicated obs.trace.TraceBuffer;
+    ``health=True`` appends a replicated guard.health word (before the
+    frontier stats, which stay last).
     ``frontier_caps`` (`sharded_frontier_caps`) compacts each shard's rank
     pull to its active rows/tiles — identical results, frontier.* obs
     counters published host-side."""
     axis, shard = _specs(mesh)
     loop = _make_loop(axis, params, sg.n_true, dfp=True,
                       delta_every=delta_every, trace=trace,
-                      frontier_caps=frontier_caps)
+                      frontier_caps=frontier_caps, health=health)
     out_specs = [shard, P()]
     if trace:
+        out_specs.append(P())
+    if health:
         out_specs.append(P())
     if frontier_caps is not None:
         out_specs.append(P())

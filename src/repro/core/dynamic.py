@@ -20,6 +20,7 @@ from .frontier import (FS_ACTIVE_ROWS, FS_ACTIVE_TILES, FS_COMPACT,
                        expand_frontier, fstats_init, initial_affected,
                        publish_fstats, reach_affected, update_ranks_active)
 from .pagerank import DeviceGraph, PRParams, as_device_graph, update_ranks
+from ..guard.health import MASS_TOL, health_word, rank_mass
 from ..obs.spans import get_registry
 from ..obs.trace import trace_init, trace_record
 
@@ -47,10 +48,24 @@ def batch_to_device(batch, n: int, pad_to: int | None = None) -> DeviceBatch:
                        pad(batch.ins_src, pad_to), pad(batch.ins_dst, pad_to))
 
 
+def solve_health(delta, iters, mass, params: PRParams,
+                 mass_tol: float = MASS_TOL):
+    """Health word of a finished solve loop (guard.health), from the final
+    L∞ delta / iteration count / rank mass. A +inf delta is a *signal*
+    (compact-engine overflow, distributed delta_every skip), not a number —
+    clamp it finite so it reads as H_MAX_ITER, not H_NONFINITE; NaN (real
+    poisoning) passes through untouched."""
+    dt = jnp.asarray(delta).dtype
+    delta = jnp.where(jnp.isposinf(delta), jnp.finfo(dt).max, delta)
+    return health_word(delta, iters, mass, tau=params.tau,
+                       max_iter=params.max_iter, mass_tol=mass_tol)
+
+
 def _loop(dg: DeviceGraph, r0: jnp.ndarray, dv0: jnp.ndarray,
           dn0: jnp.ndarray, params: PRParams, *, expand: bool, prune: bool,
           closed_form: bool, pull_sum_fn=None, tb=None, i_off=0,
-          fwd=None, caps=None, fs0=None):
+          fwd=None, caps=None, fs0=None, health: bool = False,
+          mass_tol: float = MASS_TOL):
     """Shared Alg. 2 loop. When `expand` is False the affected set is frozen
     (ND/DT); δ_N is then never produced (track_frontier=False).
 
@@ -125,52 +140,68 @@ def _loop(dg: DeviceGraph, r0: jnp.ndarray, dv0: jnp.ndarray,
     init = (r0, dv0, dn0, jnp.asarray(jnp.inf, r0.dtype),
             jnp.asarray(0, jnp.int32),
             jnp.asarray(0, jnp.int32) if tb is None else tb, fs_init)
-    r, _, _, _, iters, tb_out, fs = jax.lax.while_loop(cond, body, init)
-    if caps is None:
-        return (r, iters) if tb is None else (r, iters, tb_out)
-    return (r, iters, fs) if tb is None else (r, iters, tb_out, fs)
+    r, _, _, delta, iters, tb_out, fs = jax.lax.while_loop(cond, body, init)
+    # output shape contract: (r, iters)[, tb][, health][, fs-last] — fs
+    # stays last so `_publish` can pop it blind; health (guard.health word,
+    # one fused Σ R reduction over the final ranks) rides just before it.
+    out = [r, iters]
+    if tb is not None:
+        out.append(tb_out)
+    if health:
+        # iters vs params.max_iter, NOT i_off+iters: a dense finish runs
+        # with the *remaining* budget, so its own exhaustion is exactly the
+        # total budget's exhaustion
+        out.append(solve_health(delta, iters, rank_mass(r), params,
+                                mass_tol))
+    if caps is not None:
+        out.append(fs)
+    return tuple(out)
 
 
 def nd_pagerank(dg, r_prev: jnp.ndarray, params: PRParams = PRParams(),
-                pull_sum_fn=None, trace: bool = False):
+                pull_sum_fn=None, trace: bool = False, health: bool = False):
     """Naive-dynamic: previous ranks as the initial guess, all vertices on.
 
     All four dynamic drivers accept a DeviceGraph or a pre-staged snapshot
     (anything with a `.dg` attribute, e.g. repro.stream.DeviceSnapshot),
     and a ``trace=True`` flag returning (r, iters, obs.trace.TraceBuffer)
-    with identical ranks/iters to the untraced call.
+    with identical ranks/iters to the untraced call. ``health=True``
+    additionally appends the solve's guard.health word (int32 bitmask,
+    device-side) after the trace buffer.
     """
     return _nd_pagerank(as_device_graph(dg), r_prev, params, pull_sum_fn,
-                        trace)
+                        trace, health)
 
 
 @functools.partial(jax.jit, static_argnames=("params", "pull_sum_fn",
-                                             "trace"))
+                                             "trace", "health"))
 def _nd_pagerank(dg: DeviceGraph, r_prev: jnp.ndarray,
                  params: PRParams = PRParams(), pull_sum_fn=None,
-                 trace: bool = False):
+                 trace: bool = False, health: bool = False):
     n = dg.n
     on = jnp.ones((n,), jnp.bool_)
     off = jnp.zeros((n,), jnp.bool_)
     tb = trace_init(params.max_iter, r_prev.dtype, "nd") if trace else None
     return _loop(dg, r_prev, on, off, params, expand=False, prune=False,
-                 closed_form=False, pull_sum_fn=pull_sum_fn, tb=tb)
+                 closed_form=False, pull_sum_fn=pull_sum_fn, tb=tb,
+                 health=health)
 
 
 def dt_pagerank(dg, dg_prev, r_prev: jnp.ndarray, batch: DeviceBatch,
                 params: PRParams = PRParams(), pull_sum_fn=None,
-                trace: bool = False):
+                trace: bool = False, health: bool = False):
     """Dynamic Traversal (Desikan et al.): mark everything reachable from the
     updated vertices in G^{t-1} ∪ G^t, then iterate on that frozen set."""
     return _dt_pagerank(as_device_graph(dg), as_device_graph(dg_prev),
-                        r_prev, batch, params, pull_sum_fn, trace)
+                        r_prev, batch, params, pull_sum_fn, trace, health)
 
 
 @functools.partial(jax.jit, static_argnames=("params", "pull_sum_fn",
-                                             "trace"))
+                                             "trace", "health"))
 def _dt_pagerank(dg: DeviceGraph, dg_prev: DeviceGraph, r_prev: jnp.ndarray,
                  batch: DeviceBatch, params: PRParams = PRParams(),
-                 pull_sum_fn=None, trace: bool = False):
+                 pull_sum_fn=None, trace: bool = False,
+                 health: bool = False):
     n = dg.n
     seeds = jnp.zeros((n,), jnp.bool_)
     seeds = seeds.at[batch.del_src].set(True, mode="drop")
@@ -181,12 +212,14 @@ def _dt_pagerank(dg: DeviceGraph, dg_prev: DeviceGraph, r_prev: jnp.ndarray,
     off = jnp.zeros((n,), jnp.bool_)
     tb = trace_init(params.max_iter, r_prev.dtype, "dt") if trace else None
     return _loop(dg, r_prev, affected, off, params, expand=False, prune=False,
-                 closed_form=False, pull_sum_fn=pull_sum_fn, tb=tb)
+                 closed_form=False, pull_sum_fn=pull_sum_fn, tb=tb,
+                 health=health)
 
 
 def _df_like(dg: DeviceGraph, r_prev: jnp.ndarray, batch: DeviceBatch,
              params: PRParams, *, prune: bool, pull_sum_fn=None,
-             trace: bool = False, fwd=None, caps=None):
+             trace: bool = False, fwd=None, caps=None,
+             health: bool = False):
     n = dg.n
     dv, dn = initial_affected(n, batch.del_src, batch.del_dst, batch.ins_src)
     fs0 = None
@@ -208,7 +241,7 @@ def _df_like(dg: DeviceGraph, r_prev: jnp.ndarray, batch: DeviceBatch,
                     "dfp" if prune else "df") if trace else None
     return _loop(dg, r_prev, dv, dn0, params, expand=True, prune=prune,
                  closed_form=prune, pull_sum_fn=pull_sum_fn, tb=tb,
-                 fwd=fwd, caps=caps, fs0=fs0)
+                 fwd=fwd, caps=caps, fs0=fs0, health=health)
 
 
 def _resolve_frontier(dg, fwd, frontier_caps):
@@ -234,7 +267,8 @@ def _publish(out, caps, trace):
 
 def df_pagerank(dg, r_prev: jnp.ndarray, batch: DeviceBatch,
                 params: PRParams = PRParams(), pull_sum_fn=None,
-                trace: bool = False, fwd=None, frontier_caps=None):
+                trace: bool = False, fwd=None, frontier_caps=None,
+                health: bool = False):
     """Dynamic Frontier: incremental expansion, no pruning (Eq. 1 update).
 
     `frontier_caps` (core.frontier.FrontierCaps / caps_for) switches on the
@@ -242,35 +276,40 @@ def df_pagerank(dg, r_prev: jnp.ndarray, batch: DeviceBatch,
     sweep only on capacity overflow; identical results either way."""
     fwdd, caps = _resolve_frontier(dg, fwd, frontier_caps)
     out = _df_pagerank(as_device_graph(dg), fwdd, r_prev, batch, params,
-                       pull_sum_fn, trace, caps)
+                       pull_sum_fn, trace, caps, health)
     return _publish(out, caps, trace)
 
 
 @functools.partial(jax.jit, static_argnames=("params", "pull_sum_fn",
-                                             "trace", "caps"))
+                                             "trace", "caps", "health"))
 def _df_pagerank(dg: DeviceGraph, fwd, r_prev: jnp.ndarray,
                  batch: DeviceBatch, params: PRParams = PRParams(),
-                 pull_sum_fn=None, trace: bool = False, caps=None):
+                 pull_sum_fn=None, trace: bool = False, caps=None,
+                 health: bool = False):
     return _df_like(dg, r_prev, batch, params, prune=False,
-                    pull_sum_fn=pull_sum_fn, trace=trace, fwd=fwd, caps=caps)
+                    pull_sum_fn=pull_sum_fn, trace=trace, fwd=fwd, caps=caps,
+                    health=health)
 
 
 def dfp_pagerank(dg, r_prev: jnp.ndarray, batch: DeviceBatch,
                  params: PRParams = PRParams(), pull_sum_fn=None,
-                 trace: bool = False, fwd=None, frontier_caps=None):
+                 trace: bool = False, fwd=None, frontier_caps=None,
+                 health: bool = False):
     """Dynamic Frontier with Pruning: expansion + pruning, closed form Eq. 2.
 
     See `df_pagerank` for the `frontier_caps` compacted path."""
     fwdd, caps = _resolve_frontier(dg, fwd, frontier_caps)
     out = _dfp_pagerank(as_device_graph(dg), fwdd, r_prev, batch, params,
-                        pull_sum_fn, trace, caps)
+                        pull_sum_fn, trace, caps, health)
     return _publish(out, caps, trace)
 
 
 @functools.partial(jax.jit, static_argnames=("params", "pull_sum_fn",
-                                             "trace", "caps"))
+                                             "trace", "caps", "health"))
 def _dfp_pagerank(dg: DeviceGraph, fwd, r_prev: jnp.ndarray,
                   batch: DeviceBatch, params: PRParams = PRParams(),
-                  pull_sum_fn=None, trace: bool = False, caps=None):
+                  pull_sum_fn=None, trace: bool = False, caps=None,
+                  health: bool = False):
     return _df_like(dg, r_prev, batch, params, prune=True,
-                    pull_sum_fn=pull_sum_fn, trace=trace, fwd=fwd, caps=caps)
+                    pull_sum_fn=pull_sum_fn, trace=trace, fwd=fwd, caps=caps,
+                    health=health)

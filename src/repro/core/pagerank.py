@@ -202,23 +202,26 @@ def update_ranks(dg: DeviceGraph, r: jnp.ndarray, affected: jnp.ndarray,
 # ---------------------------------------------------------------------------
 
 def static_pagerank(dg, r0: jnp.ndarray, params: PRParams = PRParams(),
-                    pull_sum_fn=None, trace: bool = False):
+                    pull_sum_fn=None, trace: bool = False,
+                    health: bool = False):
     """Power iteration to L-inf tolerance. Returns (ranks, n_iters) — or
     (ranks, n_iters, TraceBuffer) with ``trace=True``, which carries the
     per-iteration L∞ series through the loop as aux state (obs.trace;
-    identical ranks either way, no host callbacks).
+    identical ranks either way, no host callbacks). ``health=True`` appends
+    the solve's guard.health word (int32 bitmask) last.
 
     `dg` may be a DeviceGraph or any pre-staged snapshot (see as_device_graph).
     """
     return _static_pagerank(as_device_graph(dg), jnp.asarray(r0), params,
-                            pull_sum_fn, trace)
+                            pull_sum_fn, trace, health)
 
 
 @functools.partial(jax.jit, static_argnames=("params", "pull_sum_fn",
-                                             "trace"))
+                                             "trace", "health"))
 def _static_pagerank(dg: DeviceGraph, r0: jnp.ndarray,
                      params: PRParams = PRParams(),
-                     pull_sum_fn=None, trace: bool = False):
+                     pull_sum_fn=None, trace: bool = False,
+                     health: bool = False):
     n = dg.n
     all_on = jnp.ones((n,), dtype=jnp.bool_)
     zero = jnp.asarray(0, jnp.int32)
@@ -240,5 +243,14 @@ def _static_pagerank(dg: DeviceGraph, r0: jnp.ndarray,
 
     tb0 = trace_init(params.max_iter, r0.dtype, "static") if trace else zero
     init = (r0, jnp.asarray(jnp.inf, r0.dtype), zero, tb0)
-    r, _, iters, tb = jax.lax.while_loop(cond, body, init)
-    return (r, iters, tb) if trace else (r, iters)
+    r, delta, iters, tb = jax.lax.while_loop(cond, body, init)
+    out = [r, iters]
+    if trace:
+        out.append(tb)
+    if health:
+        from ..guard.health import health_word, rank_mass  # lazy: no cycle
+        dt = jnp.asarray(delta).dtype
+        delta = jnp.where(jnp.isposinf(delta), jnp.finfo(dt).max, delta)
+        out.append(health_word(delta, iters, rank_mass(r), tau=params.tau,
+                               max_iter=params.max_iter))
+    return tuple(out)

@@ -1,0 +1,95 @@
+"""Numerical-health word: device-side solve diagnostics (ISSUE 9 tentpole).
+
+Every solve loop in the repo converges on the same two scalars — the L∞
+rank delta of the last sweep and the iteration counter — and the final rank
+vector is already resident when the loop exits. The health word packs the
+three failure modes a chained DF-P stream must distinguish from success
+into one int32 bitmask computed from exactly those values:
+
+  ``H_MAX_ITER``   the loop exited at ``max_iter`` with the L∞ delta still
+                   above τ — "ran out of iterations", which the legacy
+                   ``(r, iters)`` return made indistinguishable from
+                   convergence;
+  ``H_NONFINITE``  NaN/Inf reached the ranks. No extra HBM pass is needed:
+                   a non-finite rank propagates into the sweep's L∞ |Δr|
+                   reduction (``max`` propagates NaN; an unaffected
+                   poisoned lane yields ``|NaN - NaN| = NaN`` too), and the
+                   rank-mass sum catches anything the delta misses;
+  ``H_MASS_DRIFT`` Σ R drifted from 1 beyond ``mass_tol`` — the cheap
+                   whole-vector invariant of PageRank (teleport + pull
+                   conserve probability mass), which catches silent
+                   bit-level corruption that stays finite.
+
+The word is computed INSIDE the jitted drivers (one fused reduction over
+the final ranks for the mass term — once per solve, not per iteration) and
+returned as a device scalar; callers that never look at it pay nothing but
+that reduction. ``NaN > τ`` is False, so a poisoned solve exits its while
+loop on the first NaN sweep rather than spinning to ``max_iter`` — the
+watchdog fires after one iteration, not 500.
+
+This module is import-light on purpose (jax only): the core engines import
+it as a submodule (``from ..guard.health import ...``) without touching
+``repro.guard.__init__``, keeping guard <-> core import cycles impossible.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+__all__ = ["HEALTH_OK", "H_MAX_ITER", "H_NONFINITE", "H_MASS_DRIFT",
+           "MASS_TOL", "health_word", "rank_mass", "health_flags",
+           "describe_health"]
+
+HEALTH_OK = 0
+H_MAX_ITER = 1 << 0     # exited at max_iter, delta still > tau
+H_NONFINITE = 1 << 1    # NaN/Inf in the final delta or rank mass
+H_MASS_DRIFT = 1 << 2   # |sum(R) - 1| > mass_tol
+
+#: default rank-mass tolerance. DF/DF-P are *approximate* by design: an
+#: unaffected vertex keeps its previous-graph rank, so a healthy chained
+#: solve legitimately drifts Σ R by O(τ_f · |frontier boundary|) — measured
+#: ~3e-6 on small graphs with the default τ_f = 1e-6. The default sits two
+#: decades above τ_f (never flags the paper's approximation) and well below
+#: real corruption: the smallest exponent-bit flip doubles one rank,
+#: moving Σ R by ~1/(2n).
+MASS_TOL = 1e-4
+
+_FLAG_NAMES = ((H_MAX_ITER, "max_iter"), (H_NONFINITE, "nonfinite"),
+               (H_MASS_DRIFT, "mass_drift"))
+
+
+def health_word(delta: jnp.ndarray, iters: jnp.ndarray, mass: jnp.ndarray,
+                *, tau: float, max_iter: int,
+                mass_tol: float = MASS_TOL) -> jnp.ndarray:
+    """Pack the post-loop scalars into the int32 health bitmask.
+
+    ``delta`` is the final L∞ |Δr| the loop converged on (its while-cond
+    scalar), ``iters`` the iteration count, ``mass`` the Σ R of the final
+    ranks (callers on sharded layouts pass the psum of their valid-masked
+    local sums). All three are device scalars; so is the result.
+    """
+    bad_iter = (iters >= max_iter) & (delta > tau)
+    nonfinite = ~(jnp.isfinite(delta) & jnp.isfinite(mass))
+    drift = jnp.abs(mass - 1.0) > mass_tol
+    return (bad_iter.astype(jnp.int32) * H_MAX_ITER
+            | nonfinite.astype(jnp.int32) * H_NONFINITE
+            | drift.astype(jnp.int32) * H_MASS_DRIFT)
+
+
+def rank_mass(r: jnp.ndarray, valid: Optional[jnp.ndarray] = None
+              ) -> jnp.ndarray:
+    """Σ R over real vertices (``valid`` masks a padded sharded slice)."""
+    if valid is not None:
+        r = jnp.where(valid, r, 0)
+    return jnp.sum(r)
+
+
+def health_flags(word: int) -> tuple:
+    """Decode a host-side word into its flag names, e.g. ('max_iter',)."""
+    return tuple(name for bit, name in _FLAG_NAMES if int(word) & bit)
+
+
+def describe_health(word: int) -> str:
+    """Human-readable form: 'ok' or '+'-joined flag names."""
+    return "+".join(health_flags(word)) or "ok"

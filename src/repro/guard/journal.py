@@ -1,0 +1,185 @@
+"""Delta journal + session checkpoints (ISSUE 9 tentpole, piece 3).
+
+Crash recovery for a streaming session is two files' worth of state:
+
+  * an **append-only journal** of every canonical Δ^t, written *before* the
+    delta touches the snapshot (write-ahead). Records are length-prefixed
+    and CRC-protected; ``scan`` replays the longest valid prefix and flags
+    a torn tail (a crash mid-``append`` loses at most the record being
+    written, never an earlier one);
+  * periodic **checkpoints** of the full session state (ranks + the
+    snapshot's host mirrors), written through ``train/checkpoint.py``'s
+    atomic-manifest save/restore primitives — a crash mid-checkpoint never
+    corrupts the previous one.
+
+``StreamSession.restore(dir)`` = load the newest checkpoint, then replay
+every journaled delta with a later sequence number. Because the checkpoint
+captures the snapshot mirrors *exactly* (including free-list order, which
+steers future slot placement and therefore floating-point summation order),
+the restored session is bit-identical to one that never crashed
+(DESIGN.md §13).
+
+This module deliberately imports nothing from ``repro.stream`` — records
+are plain (seq, n, arrays) tuples and checkpoints are flat dicts of numpy
+arrays, so guard <-> stream import cycles cannot form; the session owns the
+translation to/from ``Delta``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import struct
+import zlib
+from typing import Any, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from ..obs.spans import get_registry as _obs
+
+__all__ = ["JournalRecord", "DeltaJournal", "journal_path",
+           "save_session_checkpoint", "load_session_checkpoint"]
+
+#: record header: magic, seq (batch index), n, n_del, n_ins, payload crc32
+_MAGIC = 0x4C445247  # "GRDL"
+_HEADER = struct.Struct("<IQQIII")
+JOURNAL_NAME = "deltas.journal"
+
+
+def journal_path(directory: str) -> str:
+    return os.path.join(directory, JOURNAL_NAME)
+
+
+@dataclasses.dataclass(frozen=True)
+class JournalRecord:
+    """One journaled canonical Δ^t (arrays int32, unique/disjoint pairs)."""
+    seq: int
+    n: int
+    del_src: np.ndarray
+    del_dst: np.ndarray
+    ins_src: np.ndarray
+    ins_dst: np.ndarray
+
+
+def _payload(rec: JournalRecord) -> bytes:
+    return b"".join(np.ascontiguousarray(a, dtype="<i4").tobytes()
+                    for a in (rec.del_src, rec.del_dst,
+                              rec.ins_src, rec.ins_dst))
+
+
+class DeltaJournal:
+    """Append-only, CRC-checked delta log. One writer, any-time readers."""
+
+    def __init__(self, path: str, fsync: bool = False):
+        self.path = path
+        self._fsync = fsync
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        self._f = open(path, "ab")
+
+    def append(self, rec: JournalRecord) -> None:
+        payload = _payload(rec)
+        head = _HEADER.pack(_MAGIC, rec.seq, rec.n,
+                            int(rec.del_src.shape[0]),
+                            int(rec.ins_src.shape[0]),
+                            zlib.crc32(payload) & 0xFFFFFFFF)
+        self._f.write(head + payload)
+        self._f.flush()
+        if self._fsync:
+            os.fsync(self._f.fileno())
+        obs = _obs()
+        obs.inc("guard.journal.appends")
+        obs.inc("guard.journal.bytes", len(head) + len(payload))
+
+    def close(self) -> None:
+        self._f.close()
+
+    @staticmethod
+    def scan(path: str) -> Tuple[List[JournalRecord], bool]:
+        """Read the longest valid record prefix.
+
+        Returns ``(records, truncated)`` — ``truncated`` is True when the
+        file ends in a torn/corrupt record (short header, short payload,
+        bad magic or CRC mismatch), which bumps ``guard.journal.truncated``.
+        Everything before the tear is intact by construction (records are
+        written in one buffered write each, in order).
+        """
+        records: List[JournalRecord] = []
+        truncated = False
+        if not os.path.exists(path):
+            return records, truncated
+        with open(path, "rb") as f:
+            data = f.read()
+        off = 0
+        while off < len(data):
+            if off + _HEADER.size > len(data):
+                truncated = True
+                break
+            magic, seq, n, n_del, n_ins, crc = _HEADER.unpack_from(data, off)
+            body = 4 * (2 * n_del + 2 * n_ins)
+            if magic != _MAGIC or off + _HEADER.size + body > len(data):
+                truncated = True
+                break
+            payload = data[off + _HEADER.size: off + _HEADER.size + body]
+            if zlib.crc32(payload) & 0xFFFFFFFF != crc:
+                truncated = True
+                break
+            arrs = np.frombuffer(payload, dtype="<i4")
+            d_s, d_d, i_s, i_d = np.split(
+                arrs, [n_del, 2 * n_del, 2 * n_del + n_ins])
+            records.append(JournalRecord(
+                seq=int(seq), n=int(n),
+                del_src=d_s.astype(np.int32), del_dst=d_d.astype(np.int32),
+                ins_src=i_s.astype(np.int32), ins_dst=i_d.astype(np.int32)))
+            off += _HEADER.size + body
+        if truncated:
+            _obs().inc("guard.journal.truncated")
+        return records, truncated
+
+
+# ---------------------------------------------------------------------------
+# Session checkpoints: flat {name: array} dicts through train/checkpoint.py
+# ---------------------------------------------------------------------------
+
+def save_session_checkpoint(directory: str, step: int, arrays: dict,
+                            extra: Optional[dict] = None) -> str:
+    """Atomic checkpoint of a flat ``{name: np.ndarray}`` dict.
+
+    ``step`` is the batch sequence number the state is valid *after*;
+    ``extra`` must be JSON-serializable (session config, capacity plans).
+    """
+    from ..train.checkpoint import save_checkpoint  # lazy: keeps guard
+    # importable without pulling the training stack in at module load
+    assert all(isinstance(k, str) for k in arrays)
+    extra = dict(extra or {})
+    extra["leaf_keys"] = sorted(arrays)  # tree_flatten's dict-key order
+    path = save_checkpoint(directory, step, arrays, extra=extra)
+    _obs().inc("guard.checkpoint.saves")
+    return path
+
+
+def load_session_checkpoint(directory: str, step: Optional[int] = None
+                            ) -> Tuple[dict, dict, int]:
+    """Inverse of ``save_session_checkpoint`` without needing a template:
+    the manifest's shapes/dtypes build the ``like`` pytree. Returns
+    ``({name: np.ndarray}, extra, step)``; checksums are verified.
+    """
+    import json
+    from ..train.checkpoint import latest_step, restore_checkpoint
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {directory}")
+    ckpt = os.path.join(directory, f"step_{step:010d}")
+    with open(os.path.join(ckpt, "manifest.json")) as f:
+        manifest = json.load(f)
+    keys = manifest["extra"]["leaf_keys"]
+    like = {}
+    for i, key in enumerate(keys):
+        meta = manifest["files"][f"leaf_{i:05d}.npy"]
+        like[key] = jax.ShapeDtypeStruct(tuple(meta["shape"]),
+                                         np.dtype(meta["dtype"]))
+    tree, extra, step = restore_checkpoint(directory, like, step=step)
+    # np.array (not asarray): the loader may hand back read-only buffers,
+    # and restored mirrors must stay editable in place
+    arrays = {k: np.array(v) for k, v in tree.items()}
+    return arrays, extra, step

@@ -21,6 +21,7 @@ import numpy as np
 
 from ..core.dynamic import DeviceBatch, batch_to_device
 from ..core.graph import (BatchUpdate, edge_keys, keys_to_edges, next_pow2)
+from ..guard.validate import validate_batch
 
 __all__ = ["Delta", "ingest", "next_pow2"]
 
@@ -62,14 +63,22 @@ def _unique_pairs(n: int, src: np.ndarray, dst: np.ndarray) -> np.ndarray:
     return np.unique(edge_keys(n, src, dst))
 
 
-def ingest(batch: BatchUpdate, n: int, coalesce: str = "del_first") -> Delta:
+def ingest(batch: BatchUpdate, n: int, coalesce: str = "del_first",
+           policy: str = "raise") -> Delta:
     """Canonicalize a BatchUpdate into a Delta.
 
     coalesce="del_first" (default) matches apply_batch: a pair in both lists
     is deleted then inserted, so it survives as an insertion. "cancel" treats
     the pair as insert-then-delete within the batch window (true temporal
     streams) and drops it from both sides.
+
+    Every batch is validated first (guard.validate): ids outside [0, n)
+    would silently alias other edges under the ``src*n + dst`` key encoding
+    below, corrupting the snapshot. ``policy="raise"`` (default) rejects
+    such batches with ``ValidationError``; ``policy="quarantine"`` drops the
+    offending pairs (counted in ``guard.quarantined``) and ingests the rest.
     """
+    batch, _ = validate_batch(batch, n, policy=policy)
     dk = _unique_pairs(n, batch.del_src, batch.del_dst)
     ik = _unique_pairs(n, batch.ins_src, batch.ins_dst)
     if dk.size:  # self-loops are never deleted (paper §5.1.4)

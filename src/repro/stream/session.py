@@ -19,6 +19,16 @@ batch routes through ``distributed_dfp_pagerank`` with the initial frontier
 seeded device-side (`initial_affected_sharded`; the engine performs the
 paper's initial expansion at iteration 0) — chained multi-device DF-P over
 a continuous stream, same lifecycle, same accounting (DESIGN.md §7).
+
+Fault tolerance (``guard=GuardConfig(...)`` — DESIGN.md §13): every raw
+batch is validated (raise or quarantine out-of-range pairs), every solve
+returns a device-side health word, and an unhealthy solve walks the
+escalation ladder — full-budget dense (or sharded) DF-P retry from the
+pre-solve ranks, then a static recompute — with ``guard.*`` counters at
+each rung. ``journal_dir=`` adds a write-ahead delta journal and (with
+``checkpoint_every=K``) periodic full-state checkpoints;
+``StreamSession.restore(dir)`` rebuilds the session bit-identically from
+the newest checkpoint plus a journal replay.
 """
 from __future__ import annotations
 
@@ -36,9 +46,15 @@ from ..core.distributed import (distributed_dfp_pagerank,
                                 initial_affected_sharded,
                                 sharded_frontier_caps)
 from ..core.dynamic import df_pagerank, dfp_pagerank
-from ..core.frontier import caps_for, merge_caps
-from ..core.graph import BatchUpdate, Graph
+from ..core.frontier import FrontierCaps, caps_for, merge_caps
+from ..core.graph import BatchUpdate, Graph, graph_from_sorted_keys
 from ..core.pagerank import PRParams, init_ranks, static_pagerank
+from ..guard import GuardConfig
+from ..guard.health import (HEALTH_OK, H_MASS_DRIFT, MASS_TOL, health_flags)
+from ..guard.journal import (DeltaJournal, JournalRecord, journal_path,
+                             load_session_checkpoint,
+                             save_session_checkpoint)
+from ..guard.validate import validate_batch
 from ..obs.spans import get_registry as _obs
 from ..obs.trace import maybe_summary
 from .delta import Delta, ingest
@@ -86,11 +102,32 @@ class BatchStats:
     #: per-iteration trace summary (`obs.trace.trace_summary` dict) when the
     #: session was built with ``trace=True``; None otherwise.
     trace: Optional[dict] = None
+    #: guard.health word of the FIRST solve attempt (0 = healthy; only
+    #: populated on guarded sessions)
+    health: int = 0
+    #: escalation-ladder rungs walked for this batch (0 = none needed)
+    escalations: int = 0
+    #: out-of-range pairs dropped by the quarantine policy at ingest
+    quarantined: int = 0
 
     @property
     def total_s(self) -> float:
         return (self.ingest_s + self.snapshot.host_s
                 + self.snapshot.device_s + self.solve_s)
+
+
+def _caps_to_json(caps: Optional[FrontierCaps]):
+    if caps is None:
+        return None
+    return {k: list(v) if isinstance(v, tuple) else int(v)
+            for k, v in caps._asdict().items()}
+
+
+def _caps_from_json(d) -> Optional[FrontierCaps]:
+    if d is None:
+        return None
+    return FrontierCaps(**{k: tuple(v) if isinstance(v, list) else int(v)
+                           for k, v in d.items()})
 
 
 class StreamSession:
@@ -105,12 +142,20 @@ class StreamSession:
     snapshot over all mesh devices and chains the 1-D distributed DF-P
     engine instead (``engine``/``prune``/``compact_threshold`` apply only to
     the single-device path; sharded DF-P always prunes).
+
+    Fault tolerance: ``guard=GuardConfig(...)`` switches on ingest
+    validation, the per-solve health watchdog + escalation ladder and the
+    periodic drift audit; ``journal_dir=``/``checkpoint_every=`` add crash
+    recovery via ``StreamSession.restore(journal_dir)``.
     """
 
     def __init__(self, g: Graph, params: Optional[PRParams] = None,
                  d_p: int = 64, tile: int = 256, engine: str = "auto",
                  prune: bool = True, compact_threshold: float = 0.015,
-                 snapshot=None, mesh=None, trace: bool = False, **snap_kw):
+                 snapshot=None, mesh=None, trace: bool = False,
+                 guard: Optional[GuardConfig] = None,
+                 journal_dir: Optional[str] = None,
+                 checkpoint_every: int = 0, **snap_kw):
         if engine not in ("auto", "dense", "compact"):
             raise ValueError(f"unknown engine: {engine!r}")
         #: when True every solve threads an iteration TraceBuffer through the
@@ -130,6 +175,11 @@ class StreamSession:
         self.prune = prune
         self.compact_threshold = compact_threshold
         self.mesh = mesh
+        self.guard = guard
+        self.journal_dir = journal_dir
+        self.checkpoint_every = checkpoint_every
+        self._snap_kw = dict(snap_kw)
+        self._d_p, self._tile = d_p, tile
         if mesh is not None:
             nd = int(mesh.devices.size)
             self.snap = snapshot if snapshot is not None else ShardedSnapshot(
@@ -145,6 +195,13 @@ class StreamSession:
         #: ever grow it, so the jit cache stays warm for the rest of the
         #: stream (zero recompiles after the high-water mark).
         self._caps = None
+        #: sequence number of the last journaled batch (noops don't count:
+        #: they change no state and are never journaled, so restore() replay
+        #: and the live stream stay aligned)
+        self._batch_idx = 0
+        self._replaying = False
+        self._journal = (DeltaJournal(journal_path(journal_dir))
+                         if journal_dir is not None else None)
 
     @property
     def n(self) -> int:
@@ -162,10 +219,33 @@ class StreamSession:
         obs = _obs()
         t0 = time.perf_counter()
         with obs.span("session.ingest"):
-            delta = batch if isinstance(batch, Delta) else ingest(
-                batch, self.n)
-            db = delta.to_device()
+            quarantined = 0
+            if isinstance(batch, Delta):
+                delta = batch
+            else:
+                policy = (self.guard.policy if self.guard is not None
+                          else "raise")
+                batch, report = validate_batch(batch, self.n, policy=policy)
+                quarantined = report.size
+                delta = ingest(batch, self.n)
+            db = delta.to_device() if delta.size else None
         ingest_s = time.perf_counter() - t0
+
+        if delta.size == 0:
+            # an empty (or fully-quarantined) Δ changes nothing: skip the
+            # snapshot pass, the solve and the journal entirely — the
+            # zero-cost no-op every upstream coalescer is entitled to
+            obs.inc("session.engine.noop")
+            self.history.append(BatchStats(
+                batch_size=0, engine="noop", iters=0, ingest_s=ingest_s,
+                snapshot=SnapshotStats(), solve_s=0.0,
+                quarantined=quarantined))
+            return self.ranks
+
+        # write-ahead: the journal record lands BEFORE the delta touches the
+        # snapshot, so a crash anywhere past this line replays the batch
+        seq = self._batch_idx + 1
+        self._journal_append(seq, delta)
 
         snap_stats = self.snap.apply(delta)
 
@@ -174,32 +254,246 @@ class StreamSession:
         obs.inc(f"session.engine.{engine}")
         caps = self._frontier_caps(frontier_estimate(delta,
                                                      self.snap._outdeg))
+        guarded = self.guard is not None
+        r_pre = self.ranks
         with obs.span("session.solve", annotate=True):
             if engine == "sharded":
                 dv0, dn0 = initial_affected_sharded(
                     self.snap.nd, self.snap.n_loc, db)
                 out = distributed_dfp_pagerank(
                     self.mesh, self.snap.sg, self.ranks, dv0, dn0,
-                    self.params, trace=self.trace, frontier_caps=caps)
+                    self.params, trace=self.trace, frontier_caps=caps,
+                    health=guarded)
             elif engine == "compact":
                 fn = (dfp_pagerank_compact if self.prune
                       else df_pagerank_compact)
                 out = fn(self.snap, None, self.ranks, db, self.params,
-                         trace=self.trace)
+                         trace=self.trace, health=guarded)
             else:
                 fn = dfp_pagerank if self.prune else df_pagerank
                 out = fn(self.snap, self.ranks, db, self.params,
-                         trace=self.trace, frontier_caps=caps)
+                         trace=self.trace, frontier_caps=caps,
+                         health=guarded)
+            hw = 0
+            if guarded:
+                *rest, hw_dev = out
+                out = tuple(rest)
+                hw = self._apply_mass_tol(int(hw_dev), rest[0])
             (r, iters), summary = maybe_summary(out, self.trace)
+            iters = int(iters)
+            escalations = 0
+            if guarded and hw != HEALTH_OK:
+                r, iters, escalations = self._escalate(r_pre, db, hw,
+                                                       r, iters)
             r = jax.block_until_ready(r)
         solve_s = time.perf_counter() - t1
 
         self.ranks = r
+        self._batch_idx = seq
         self.history.append(BatchStats(
-            batch_size=delta.size, engine=engine, iters=int(iters),
+            batch_size=delta.size, engine=engine, iters=iters,
             ingest_s=ingest_s, snapshot=snap_stats, solve_s=solve_s,
-            trace=summary))
-        return r
+            trace=summary, health=hw, escalations=escalations,
+            quarantined=quarantined))
+        if (self.guard is not None and self.guard.audit_every
+                and self._batch_idx % self.guard.audit_every == 0):
+            self._audit()
+        if (self._journal is not None and self.checkpoint_every
+                and not self._replaying
+                and self._batch_idx % self.checkpoint_every == 0):
+            self.checkpoint()
+        return self.ranks
+
+    # -- guard: escalation ladder + drift audit ------------------------------
+
+    def _apply_mass_tol(self, hw: int, r) -> int:
+        """Re-judge the H_MASS_DRIFT bit under the guard's ``mass_tol``.
+
+        The engines bake the library default (``health.MASS_TOL``) into
+        their jitted health epilogue; a session-level override re-derives
+        the bit from the candidate ranks host-side — one O(n) reduction,
+        negligible next to the solve. A non-finite mass clears the bit
+        (H_NONFINITE already covers that failure)."""
+        g = self.guard
+        if g is None or g.mass_tol == MASS_TOL:
+            return hw
+        drift = abs(float(jnp.sum(self._flatten(jnp.asarray(r)))) - 1.0)
+        if np.isfinite(drift) and drift > g.mass_tol:
+            return hw | H_MASS_DRIFT
+        return hw & ~H_MASS_DRIFT
+
+    def _recovery_params(self) -> PRParams:
+        if self.guard.recovery_params is not None:
+            return self.guard.recovery_params
+        # the session's params with the full default iteration budget
+        # restored: a chaos-starved max_iter=1 session must still recover
+        # with a real solve
+        return self.params._replace(max_iter=PRParams().max_iter)
+
+    def _escalate(self, r_pre, db, hw: int, r, iters: int):
+        """Walk the recovery ladder after an unhealthy solve.
+
+        Rung 1 retries the batch with the *recovery* params (full iteration
+        budget) from the pre-solve ranks — dense DF-P on single-device
+        sessions (the compact engine's own superset), the sharded engine in
+        mesh mode. Rung 2 resolves from scratch: a static solve from
+        ``init_ranks``, which ignores every piece of possibly-poisoned rank
+        state. Each rung's result is accepted only if ITS health word is
+        clean; ``retry_budget`` bounds the rungs walked. Returns
+        ``(ranks, iters, rungs_walked)`` — on an exhausted budget, the last
+        attempt's result (counted in ``guard.escalate.exhausted``)."""
+        obs = _obs()
+        obs.inc("guard.unhealthy")
+        for name in health_flags(hw):
+            obs.inc(f"guard.health.{name}")
+        rp = self._recovery_params()
+        rungs = (["sharded"] if self.mesh is not None else ["dense"])
+        rungs.append("recompute")
+        walked = 0
+        for rung in rungs[:max(int(self.guard.retry_budget), 0)]:
+            walked += 1
+            obs.inc(f"guard.escalate.{rung}")
+            if rung == "dense":
+                fn = dfp_pagerank if self.prune else df_pagerank
+                r, it, hw2 = fn(self.snap, r_pre, db, rp, health=True)
+            elif rung == "sharded":
+                dv0, dn0 = initial_affected_sharded(
+                    self.snap.nd, self.snap.n_loc, db)
+                r, it, hw2 = distributed_dfp_pagerank(
+                    self.mesh, self.snap.sg, r_pre, dv0, dn0, rp,
+                    health=True)
+            else:
+                r, it, hw2 = self._static_solve(params=rp, health=True)
+            iters, hw2 = int(it), self._apply_mass_tol(int(hw2), r)
+            if hw2 == HEALTH_OK:
+                obs.inc("guard.escalate.success")
+                return r, iters, walked
+        obs.inc("guard.escalate.exhausted")
+        return r, iters, walked
+
+    def _audit(self) -> None:
+        """Every-K-batches drift audit: chained ranks vs a from-scratch
+        static solve on the current snapshot. Breaching ``audit_tol`` (L1)
+        adopts the static solve — the bounded-staleness backstop chained
+        approximation error cannot creep past. The reference runs with the
+        *recovery* params: the audit exists to catch degraded session state,
+        so its anchor must not inherit a degraded iteration budget."""
+        obs = _obs()
+        obs.inc("guard.audit.runs")
+        r_ref = self._static_solve(params=self._recovery_params())[0]
+        l1 = float(jnp.sum(jnp.abs(self.flat_ranks()
+                                   - self._flatten(r_ref))))
+        if l1 > self.guard.audit_tol:
+            obs.inc("guard.audit.resync")
+            self.ranks = r_ref
+
+    # -- guard: journal + checkpoint / restore -------------------------------
+
+    def _journal_append(self, seq: int, delta: Delta) -> None:
+        if self._journal is None or self._replaying:
+            return
+        self._journal.append(JournalRecord(
+            seq=seq, n=delta.n,
+            del_src=np.asarray(delta.del_src, np.int32),
+            del_dst=np.asarray(delta.del_dst, np.int32),
+            ins_src=np.asarray(delta.ins_src, np.int32),
+            ins_dst=np.asarray(delta.ins_dst, np.int32)))
+
+    def _session_config(self) -> dict:
+        g = self.guard
+        gd = None
+        if g is not None:
+            gd = dataclasses.asdict(g)
+            gd["recovery_params"] = (list(g.recovery_params)
+                                     if g.recovery_params is not None
+                                     else None)
+        return dict(n=self.n, params=list(self.params),
+                    d_p=self._d_p, tile=self._tile, engine=self.engine,
+                    prune=self.prune,
+                    compact_threshold=self.compact_threshold,
+                    trace=self.trace, mesh=self.mesh is not None,
+                    checkpoint_every=self.checkpoint_every,
+                    guard=gd, snap_kw=dict(self._snap_kw))
+
+    def checkpoint(self) -> str:
+        """Write a full-state checkpoint (ranks + snapshot mirrors + config)
+        under ``journal_dir``, valid after batch ``_batch_idx``. Atomic via
+        train/checkpoint.py's manifest rename."""
+        if self.journal_dir is None:
+            raise ValueError("session has no journal_dir")
+        arrays, snap_extra = self.snap.state_dict()
+        arrays = dict(arrays)
+        arrays["ranks"] = np.asarray(self.ranks)
+        extra = {"snap": snap_extra, "session": self._session_config(),
+                 "frontier_caps": _caps_to_json(self._caps)}
+        return save_session_checkpoint(self.journal_dir, self._batch_idx,
+                                       arrays, extra)
+
+    @classmethod
+    def restore(cls, directory: str, mesh=None) -> "StreamSession":
+        """Rebuild a session from ``directory``: newest checkpoint + replay
+        of every journaled delta with a later sequence number.
+
+        Bit-identical to the uninterrupted session: the checkpoint restores
+        the snapshot mirrors exactly (free-list order included — it steers
+        slot placement and therefore floating-point summation order), the
+        frontier-caps high-water mark (overflow→dense fallback changes
+        summation order too), and the rank vector; the replay then re-runs
+        the deterministic per-batch lifecycle. A torn journal tail (crash
+        mid-append) is detected by ``DeltaJournal.scan`` and dropped — at
+        most the batch being written when the process died.
+
+        ``mesh`` must be re-supplied for sharded sessions (meshes don't
+        serialize)."""
+        arrays, extra, step = load_session_checkpoint(directory)
+        cfg = extra["session"]
+        if cfg["mesh"] and mesh is None:
+            raise ValueError("checkpoint is from a mesh session: pass mesh=")
+        if not cfg["mesh"] and mesh is not None:
+            raise ValueError("checkpoint is single-device: mesh= given")
+        params = PRParams(*cfg["params"])
+        guard = None
+        if cfg.get("guard") is not None:
+            gd = dict(cfg["guard"])
+            if gd.get("recovery_params") is not None:
+                gd["recovery_params"] = PRParams(*gd["recovery_params"])
+            guard = GuardConfig(**gd)
+        g = graph_from_sorted_keys(
+            int(cfg["n"]), np.ascontiguousarray(arrays["keys"]))
+        sess = cls(g, params=params, d_p=cfg["d_p"], tile=cfg["tile"],
+                   engine=cfg["engine"], prune=cfg["prune"],
+                   compact_threshold=cfg["compact_threshold"], mesh=mesh,
+                   trace=cfg["trace"], guard=guard, journal_dir=directory,
+                   checkpoint_every=cfg["checkpoint_every"],
+                   **cfg.get("snap_kw", {}))
+        sess.snap.load_state(arrays, extra["snap"])
+        sess.ranks = jnp.asarray(arrays["ranks"])
+        sess._batch_idx = step
+        sess._caps = _caps_from_json(extra.get("frontier_caps"))
+        records, _ = DeltaJournal.scan(journal_path(directory))
+        sess._replaying = True
+        try:
+            for rec in records:
+                if rec.seq <= step:
+                    continue
+                sess.apply(Delta(
+                    n=rec.n, del_src=rec.del_src.astype(np.int64),
+                    del_dst=rec.del_dst.astype(np.int64),
+                    ins_src=rec.ins_src.astype(np.int64),
+                    ins_dst=rec.ins_dst.astype(np.int64)))
+                sess._batch_idx = rec.seq
+        finally:
+            sess._replaying = False
+        _obs().inc("guard.restores")
+        return sess
+
+    def close(self) -> None:
+        """Close the journal file handle (restore() reopens on demand)."""
+        if self._journal is not None:
+            self._journal.close()
+            self._journal = None
+
+    # -- engine/caps plumbing ------------------------------------------------
 
     def _frontier_caps(self, est: int):
         """Frontier capacity plan for this batch — the running elementwise
@@ -223,19 +517,21 @@ class StreamSession:
         return choose_engine(delta, self.snap._outdeg, self.n,
                              self.compact_threshold)
 
-    def _static_solve(self):
+    def _static_solve(self, params: Optional[PRParams] = None,
+                      health: bool = False):
         """From-scratch static solve on the current snapshot, in the
         session's native rank layout (dense [n], or stacked [nd, n_loc] in
         mesh mode). The single place the recipe lives: init vector, engine
         choice and params stay in lock-step across __init__ /
-        static_reference / recompute."""
+        static_reference / recompute / the ladder's recompute rung."""
+        params = params if params is not None else self.params
         if self.mesh is None:
             return static_pagerank(self.snap.dg, init_ranks(self.n),
-                                   self.params)
+                                   params, health=health)
         r0 = jnp.full((self.snap.nd, self.snap.n_loc), 1.0 / self.n,
                       init_ranks(1).dtype)
         return distributed_static_pagerank(self.mesh, self.snap.sg, r0,
-                                           self.params)
+                                           params, health=health)
 
     def _flatten(self, r: jnp.ndarray) -> jnp.ndarray:
         return r if self.mesh is None else jnp.reshape(r, (-1,))[:self.n]
@@ -257,6 +553,15 @@ class StreamSession:
 
     def recompute(self) -> jnp.ndarray:
         """Full static recomputation on the current snapshot (re-sync /
-        verification anchor); resets the session's rank state."""
-        self.ranks, _ = self._static_solve()
+        verification anchor); resets the session's rank state. Appends an
+        ``engine="recompute"`` record to ``history`` and bumps the
+        ``session.recompute`` counter, so resyncs are visible in the same
+        accounting stream as regular batches."""
+        t0 = time.perf_counter()
+        self.ranks, iters = self._static_solve()
+        _obs().inc("session.recompute")
+        self.history.append(BatchStats(
+            batch_size=0, engine="recompute", iters=int(iters),
+            ingest_s=0.0, snapshot=SnapshotStats(),
+            solve_s=time.perf_counter() - t0))
         return self.ranks

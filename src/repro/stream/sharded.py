@@ -133,7 +133,11 @@ class ShardedSnapshot:
             if self._low_water is not None:
                 half.low_water = self._low_water
             self._halves.append(half)
-        # stacked device residency (copies: the mirrors mutate in place)
+        self._restack()
+
+    def _restack(self) -> None:
+        # stacked device residency (copies: the mirrors mutate in place) —
+        # adopt/rebuild and checkpoint-restore both end here
         self.dev_buckets: List[EllBlock] = [
             EllBlock(
                 rows=jnp.asarray(
@@ -142,7 +146,7 @@ class ShardedSnapshot:
                     np.stack([h.bk_idx[bi] for h in self._halves])),
                 mask=jnp.asarray(
                     np.stack([h.bk_mask[bi] for h in self._halves])))
-            for bi in range(len(caps["widths"]))]
+            for bi in range(len(self._caps["widths"]))]
         self.dev_hi_tiles = jnp.asarray(
             np.stack([h.hi_tiles for h in self._halves]))
         self.dev_hi_tmask = jnp.asarray(
@@ -190,6 +194,33 @@ class ShardedSnapshot:
 
     def fragmentation(self) -> float:
         return max(h.tile_waste() for h in self._halves)
+
+    # -- checkpoint state (guard.journal) ------------------------------------
+
+    def state_dict(self) -> tuple:
+        """(arrays, extra): complete stacked-snapshot state — edge keys,
+        degrees, and every shard's half mirrors + free-list orders under an
+        ``s{shard}.`` prefix (see `DeviceSnapshot.state_dict`)."""
+        arrays = dict(keys=self._keys, indeg=self._indeg,
+                      outdeg=self._outdeg)
+        for s, half in enumerate(self._halves):
+            arrays.update(half.state_dict(f"s{s}."))
+        extra = {"caps": {k: list(v) if isinstance(v, tuple) else int(v)
+                          for k, v in self._caps.items()}}
+        return arrays, extra
+
+    def load_state(self, arrays: dict, extra: dict) -> None:
+        """Restore from ``state_dict`` output: re-adopt at the checkpointed
+        capacities, overwrite every shard's mirrors, restack."""
+        self._keys = np.ascontiguousarray(arrays["keys"])
+        self._indeg = np.ascontiguousarray(arrays["indeg"])
+        self._outdeg = np.ascontiguousarray(arrays["outdeg"])
+        caps = {k: tuple(v) if isinstance(v, list) else int(v)
+                for k, v in extra["caps"].items()}
+        self._adopt(self.graph(), caps)
+        for s, half in enumerate(self._halves):
+            half.load_state(arrays, f"s{s}.")
+        self._restack()
 
     # -- the batch-update lifecycle ------------------------------------------
 

@@ -212,17 +212,88 @@ class _HalfLayout:
         # (stream/sharded.py) reuses this host-edit machinery per shard but
         # owns STACKED device arrays itself, draining `drain_dirty()` into
         # per-shard scatters instead of calling `device_refresh`.
+        self._staged = stage_device
         if stage_device:
-            self.dev_bk_rows = [jnp.asarray(a.copy()) for a in self.bk_rows]
-            self.dev_bk_idx = [jnp.asarray(a.copy()) for a in self.bk_idx]
-            self.dev_bk_mask = [jnp.asarray(a.copy()) for a in self.bk_mask]
-            self.dev_bucket_of = jnp.asarray(self.bucket_of.copy())
-            self.dev_slot_of = jnp.asarray(self.slot_of.copy())
-            self.dev_hi_tiles = jnp.asarray(self.hi_tiles.copy())
-            self.dev_hi_tmask = jnp.asarray(self.hi_tmask.copy())
-            self.dev_hi_rowmap = jnp.asarray(self.hi_rowmap.copy())
-            self.dev_hi_ids = jnp.asarray(self.hi_ids.copy())
-            self.dev_is_low = jnp.asarray(self.is_low.copy())
+            self._stage_device()
+
+    def _stage_device(self) -> None:
+        self.dev_bk_rows = [jnp.asarray(a.copy()) for a in self.bk_rows]
+        self.dev_bk_idx = [jnp.asarray(a.copy()) for a in self.bk_idx]
+        self.dev_bk_mask = [jnp.asarray(a.copy()) for a in self.bk_mask]
+        self.dev_bucket_of = jnp.asarray(self.bucket_of.copy())
+        self.dev_slot_of = jnp.asarray(self.slot_of.copy())
+        self.dev_hi_tiles = jnp.asarray(self.hi_tiles.copy())
+        self.dev_hi_tmask = jnp.asarray(self.hi_tmask.copy())
+        self.dev_hi_rowmap = jnp.asarray(self.hi_rowmap.copy())
+        self.dev_hi_ids = jnp.asarray(self.hi_ids.copy())
+        self.dev_is_low = jnp.asarray(self.is_low.copy())
+
+    # -- checkpoint state (guard.journal) ------------------------------------
+
+    def state_dict(self, prefix: str) -> dict:
+        """Complete host-mirror state as a flat {name: np.ndarray} dict.
+
+        Everything that steers future edits is captured, INCLUDING the
+        free-list orders: a free list is consumed LIFO, so its order decides
+        where the next insertion lands, which decides gather/summation
+        order, which decides the floating-point result. Restoring anything
+        less than the exact order would be correct-but-not-bit-identical.
+        ``slot_tiles`` (ragged per-slot tile lists) flattens to the usual
+        offsets+data pair.
+        """
+        st = {}
+        for bi in range(len(self.widths)):
+            st[f"{prefix}bk_rows{bi}"] = self.bk_rows[bi]
+            st[f"{prefix}bk_idx{bi}"] = self.bk_idx[bi]
+            st[f"{prefix}bk_mask{bi}"] = self.bk_mask[bi]
+            st[f"{prefix}free_bslots{bi}"] = np.asarray(
+                self.free_bslots[bi], np.int64)
+        st[f"{prefix}bucket_of"] = self.bucket_of
+        st[f"{prefix}slot_of"] = self.slot_of
+        st[f"{prefix}hi_tiles"] = self.hi_tiles
+        st[f"{prefix}hi_tmask"] = self.hi_tmask
+        st[f"{prefix}hi_rowmap"] = self.hi_rowmap
+        st[f"{prefix}hi_ids"] = self.hi_ids
+        st[f"{prefix}is_low"] = self.is_low
+        st[f"{prefix}row_deg"] = self.row_deg
+        st[f"{prefix}hi_slot"] = self.hi_slot
+        st[f"{prefix}free_tiles"] = np.asarray(self.free_tiles, np.int64)
+        st[f"{prefix}free_slots"] = np.asarray(self.free_slots, np.int64)
+        off = np.zeros(len(self.slot_tiles) + 1, np.int64)
+        off[1:] = np.cumsum([len(t) for t in self.slot_tiles])
+        st[f"{prefix}slot_tiles_off"] = off
+        st[f"{prefix}slot_tiles_dat"] = np.asarray(
+            [t for ts in self.slot_tiles for t in ts], np.int64)
+        st[f"{prefix}migrations"] = np.asarray([self.migrations], np.int64)
+        return st
+
+    def load_state(self, st: dict, prefix: str) -> None:
+        """Inverse of ``state_dict`` — overwrites the mirrors of a half
+        built at the SAME capacities, then restages the device arrays."""
+        nb = len(self.widths)
+        for bi in range(nb):
+            self.bk_rows[bi] = np.ascontiguousarray(st[f"{prefix}bk_rows{bi}"])
+            self.bk_idx[bi] = np.ascontiguousarray(st[f"{prefix}bk_idx{bi}"])
+            self.bk_mask[bi] = np.ascontiguousarray(st[f"{prefix}bk_mask{bi}"])
+            self.free_bslots[bi] = [
+                int(s) for s in st[f"{prefix}free_bslots{bi}"]]
+        for name in ("bucket_of", "slot_of", "hi_tiles", "hi_tmask",
+                     "hi_rowmap", "hi_ids", "is_low", "row_deg", "hi_slot"):
+            setattr(self, name, np.ascontiguousarray(st[f"{prefix}{name}"]))
+        self.free_tiles = [int(t) for t in st[f"{prefix}free_tiles"]]
+        self.free_slots = [int(s) for s in st[f"{prefix}free_slots"]]
+        off = st[f"{prefix}slot_tiles_off"]
+        dat = st[f"{prefix}slot_tiles_dat"]
+        self.slot_tiles = [
+            [int(t) for t in dat[off[i]:off[i + 1]]]
+            for i in range(off.shape[0] - 1)]
+        self.migrations = int(st[f"{prefix}migrations"][0])
+        self._dirty_slots = [set() for _ in range(nb)]
+        self._dirty_tiles = set()
+        self._bmap_dirty = [False] * nb
+        self._rowmap_dirty = self._side_dirty = False
+        if self._staged:
+            self._stage_device()
 
     # -- dirty-state handoff (sharded snapshot path) -------------------------
 
@@ -618,6 +689,34 @@ class DeviceSnapshot:
 
     def fragmentation(self) -> float:
         return max(self._pull.tile_waste(), self._fwd.tile_waste())
+
+    # -- checkpoint state (guard.journal) ------------------------------------
+
+    def state_dict(self) -> tuple:
+        """(arrays, extra): the complete snapshot state for a bit-identical
+        session checkpoint. ``arrays`` is a flat {name: np.ndarray} dict
+        (edge keys, degrees, both halves' mirrors + free-list orders);
+        ``extra`` is the JSON-safe capacity signature ``load_state`` rebuilds
+        at (shapes must match for the mirror overwrite)."""
+        arrays = dict(keys=self._keys, indeg=self._indeg,
+                      outdeg=self._outdeg)
+        arrays.update(self._pull.state_dict("p."))
+        arrays.update(self._fwd.state_dict("f."))
+        extra = {"caps": {k: list(v) if isinstance(v, tuple) else int(v)
+                          for k, v in self._caps.items()}}
+        return arrays, extra
+
+    def load_state(self, arrays: dict, extra: dict) -> None:
+        """Restore from ``state_dict`` output: re-adopt at the checkpointed
+        capacities (device shapes match), then overwrite every mirror."""
+        self._keys = np.ascontiguousarray(arrays["keys"])
+        self._indeg = np.ascontiguousarray(arrays["indeg"])
+        self._outdeg = np.ascontiguousarray(arrays["outdeg"])
+        caps = {k: tuple(v) if isinstance(v, list) else int(v)
+                for k, v in extra["caps"].items()}
+        self._adopt(self.graph(), caps)
+        self._pull.load_state(arrays, "p.")
+        self._fwd.load_state(arrays, "f.")
 
     # -- the batch-update lifecycle ------------------------------------------
 
