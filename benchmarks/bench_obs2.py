@@ -1,0 +1,121 @@
+"""BENCH: always-on observability overhead (ISSUE 10).
+
+The flight recorder + span histograms run on EVERY batch of every stream —
+they are only allowed to exist if they are effectively free. This bench
+measures the whole always-on layer's price directly: the same stream is
+replayed with the layer enabled (default) and disabled
+(``set_obs_enabled(False)``, the ``REPRO_OBS_OFF`` baseline), reps
+interleaved so scheduler noise hits both configurations equally.
+
+  obs2/stream-obs-off      per-batch apply, always-on layer off (baseline)
+  obs2/stream-obs-on       per-batch apply, flight + histograms live —
+                           derived ``overhead=`` % (acceptance: < 2%)
+  obs2/stream-slo          obs on + an SLOConfig judging every batch's
+                           running p99 (the full v2 configuration)
+  obs2/flight-emit         one FlightRecorder.emit, microbenched
+  obs2/hist-add            one Histogram.add, microbenched
+
+The stream rows carry exact per-batch tail percentiles (``us_p50/p95/p99``
+in the v2 report) from the kept per-batch samples.
+"""
+from __future__ import annotations
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import time
+
+import numpy as np
+
+from repro.core import BatchUpdate, temporal_stream
+from repro.obs import (FlightRecorder, Histogram, SLOConfig, obs_enabled,
+                       set_obs_enabled)
+from repro.stream import StreamSession
+from .common import emit, smoke
+
+N = 20_000
+EDGES = 300_000
+BATCH = 256
+N_BATCHES = 16
+REPS = 3
+CAPS = dict(d_p=64, tile=256)
+
+
+def _stream_batches(base, batches, **sess_kw):
+    """One full stream replay; returns (total_s, per-batch seconds list)."""
+    sess = StreamSession(base, **CAPS, **sess_kw)
+    samples = []
+    t0 = time.perf_counter()
+    for b in batches:
+        t1 = time.perf_counter()
+        sess.apply(b)
+        jax.block_until_ready(sess.ranks)
+        samples.append(time.perf_counter() - t1)
+    return time.perf_counter() - t0, samples
+
+
+def run(n=N, edges=EDGES):
+    batch, n_batches, reps = BATCH, N_BATCHES, REPS
+    if smoke():
+        n, edges, batch, n_batches, reps = 4_000, 40_000, 64, 8, 5
+    base, raw = temporal_stream(n, edges, n_batches=1000, seed=7)
+    src = np.concatenate([b.ins_src for b in raw])
+    dst = np.concatenate([b.ins_dst for b in raw])
+    batches = []
+    off = 0
+    for _ in range(n_batches):
+        batches.append(BatchUpdate(
+            del_src=np.zeros(0, np.int32), del_dst=np.zeros(0, np.int32),
+            ins_src=src[off:off + batch], ins_dst=dst[off:off + batch]))
+        off += batch
+
+    # -- always-on layer on/off (interleaved; rep 0 = jit warmup) ------------
+    was_on = obs_enabled()
+    best = {"on": float("inf"), "off": float("inf"), "slo": float("inf")}
+    kept = {}
+    try:
+        for rep in range(reps + 1):
+            set_obs_enabled(False)
+            dt, samples = _stream_batches(base, batches)
+            if rep > 0 and dt < best["off"]:
+                best["off"], kept["off"] = dt, samples
+            set_obs_enabled(True)
+            dt, samples = _stream_batches(base, batches)
+            if rep > 0 and dt < best["on"]:
+                best["on"], kept["on"] = dt, samples
+            dt, samples = _stream_batches(
+                base, batches,
+                slo=SLOConfig(solve_p99_us=float("inf"), min_samples=1))
+            if rep > 0 and dt < best["slo"]:
+                best["slo"], kept["slo"] = dt, samples
+    finally:
+        set_obs_enabled(was_on)
+
+    per_batch = {k: v / n_batches * 1e6 for k, v in best.items()}
+    emit("obs2/stream-obs-off", per_batch["off"],
+         f"batches={n_batches} batch={batch}", hist=kept["off"])
+    for key, label in (("on", "obs-on"), ("slo", "slo")):
+        ovh = 100.0 * (best[key] - best["off"]) / best["off"]
+        emit(f"obs2/stream-{label}", per_batch[key],
+             f"overhead={ovh:.2f}% batches={n_batches}", hist=kept[key])
+
+    # -- primitive costs (the per-event price the stream rows amortize) ------
+    fl = FlightRecorder(capacity=1024)
+    k = 20_000 if not smoke() else 5_000
+    t0 = time.perf_counter()
+    for i in range(k):
+        fl.emit("bench.tick", i=i)
+    emit("obs2/flight-emit", (time.perf_counter() - t0) / k * 1e6,
+         f"events={k} dropped={fl.dropped}")
+
+    h = Histogram()
+    t0 = time.perf_counter()
+    for i in range(k):
+        h.add(1e-4 + i * 1e-9)
+    emit("obs2/hist-add", (time.perf_counter() - t0) / k * 1e6,
+         f"samples={k} p99_s={h.percentile(99):.2e}")
+
+
+if __name__ == "__main__":
+    run()

@@ -35,12 +35,15 @@ class Timing(NamedTuple):
 
     ``min_s`` is the headline (noise-robust on a shared host: the minimum is
     the run least disturbed by the scheduler); mean/std are kept so the
-    structured sink can show spread, not to replace the min.
+    structured sink can show spread, not to replace the min. ``samples``
+    holds every per-call wall-clock (seconds) so the v2 report can carry
+    exact tail percentiles (empty on hand-built Timings: optional).
     """
     min_s: float
     mean_s: float
     std_s: float
     reps: int
+    samples: tuple = ()
 
 
 def timeit(fn, *args, warmup=1, iters=3, **kw):
@@ -61,7 +64,8 @@ def timeit(fn, *args, warmup=1, iters=3, **kw):
         ts.append(time.perf_counter() - t0)
     arr = np.asarray(ts)
     return Timing(min_s=float(arr.min()), mean_s=float(arr.mean()),
-                  std_s=float(arr.std()), reps=len(ts)), out
+                  std_s=float(arr.std()), reps=len(ts),
+                  samples=tuple(ts)), out
 
 
 def geomean(xs) -> float:
@@ -96,13 +100,17 @@ def reset_records() -> None:
 
 def emit(name: str, us_per_call: float, derived: str = "", *,
          timing: Optional[Timing] = None,
-         trace: Optional[dict] = None) -> None:
+         trace: Optional[dict] = None, hist=None) -> None:
     """Print the CSV row and record the structured equivalent.
 
     ``timing`` (when the bench used :func:`timeit`) contributes mean/std to
     the JSON record; without it the record carries the headline only.
     ``trace`` is a ``repro.obs.trace.trace_summary`` dict — the
     per-iteration linf/frontier series for this bench's solve.
+    ``hist`` adds the v2 tail-latency columns (``us_p50/p95/p99/max``): a
+    ``repro.obs.hist.Histogram``, a raw per-call sample list (seconds), or
+    nothing — in which case ``timing.samples`` is used when it holds enough
+    calls for a percentile to mean anything (>= 5).
     """
     print(f"{name},{us_per_call:.1f},{derived}")
     rec = {"name": name, "us_min": float(us_per_call), "derived": derived}
@@ -112,4 +120,13 @@ def emit(name: str, us_per_call: float, derived: str = "", *,
         rec["reps"] = timing.reps
     if trace is not None:
         rec["trace"] = trace
+    if hist is None and timing is not None and len(timing.samples) >= 5:
+        hist = timing.samples
+    if hist is not None:
+        from repro.obs.hist import percentiles_from_samples
+        pct = (hist.as_dict() if hasattr(hist, "as_dict")
+               else percentiles_from_samples(hist))
+        if pct.get("p50_s") is not None:
+            for k in ("p50", "p95", "p99", "max"):
+                rec[f"us_{k}"] = pct[f"{k}_s"] * 1e6
     RECORDS.append(rec)

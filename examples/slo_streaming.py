@@ -1,0 +1,65 @@
+"""SLO-guarded streaming (repro.obs v2): flight recorder, latency
+percentiles, breach-armed profiler capture, and a post-mortem bundle.
+
+A production stream session is judged on its tail, not its mean: this demo
+runs a guarded StreamSession under an intentionally-unmeetable p99 budget
+so every piece of the observability layer fires on a healthy host —
+
+  1. per-batch solve latency lands in the session's histogram (p50/p95/p99);
+  2. the running p99 breaches the SLO -> ``slo.breach.solve_p99`` counts,
+     a flight event records it, and ``jax.profiler`` capture is armed
+     around the next batches (the ``solve.*``/``session.solve`` spans are
+     annotated, so kernels show up on that timeline);
+  3. a chaos-poisoned batch exhausts the escalation ladder -> a post-mortem
+     bundle is written and rendered.
+
+  PYTHONPATH=src python examples/slo_streaming.py
+"""
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import shutil
+import tempfile
+
+from repro.core import temporal_stream
+from repro.guard import ChaosMonkey, GuardConfig
+from repro.obs import SLOConfig, get_flight
+from repro.obs.postmortem import render
+from repro.obs.spans import get_registry
+from repro.stream import StreamSession
+
+workdir = tempfile.mkdtemp(prefix="slo_streaming_")
+base, batches = temporal_stream(1_000, 12_000, n_batches=8, seed=11)
+
+# p99 budget of 1µs: unmeetable by construction, so the breach machinery
+# demonstrably fires; real deployments set this from their latency target.
+slo = SLOConfig(solve_p99_us=1.0, min_samples=4, capture_batches=1,
+                capture_dir=f"{workdir}/profile")
+sess = StreamSession(base, guard=GuardConfig(
+    policy="quarantine", retry_budget=0, postmortem_dir=workdir), slo=slo)
+
+for i, b in enumerate(batches):
+    if i == len(batches) - 1:
+        # last batch: chaos-poison the rank state; retry_budget=0 means the
+        # ladder exhausts immediately and the post-mortem path runs
+        sess.ranks = ChaosMonkey(seed=3).poison_ranks(
+            sess.ranks, mode="nan", k=1, idx=[5])
+    sess.apply(b)
+
+pct = sess.solve_percentiles()
+print(f"solve latency over {pct['count']} batches: "
+      f"p50={pct['p50_s'] * 1e3:.1f}ms p95={pct['p95_s'] * 1e3:.1f}ms "
+      f"p99={pct['p99_s'] * 1e3:.1f}ms")
+obs = get_registry()
+print(f"SLO breaches: {obs.counter('slo.breach.solve_p99')} "
+      f"(captures started: {obs.counter('slo.capture.start')}, "
+      f"profiler unavailable: {obs.counter('slo.capture.unavailable')})")
+print(f"flight recorder: {get_flight().summary()['total']} events; last 5:")
+for e in get_flight().tail(5):
+    print(f"  [{e.seq}] {e.kind} {e.data}")
+
+print("\npost-mortem bundle (escalation exhausted on the poisoned batch):")
+render(workdir)
+
+shutil.rmtree(workdir, ignore_errors=True)

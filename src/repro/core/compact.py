@@ -32,6 +32,7 @@ from .frontier import (FrontierCaps, active_frontier, initial_affected,
                        plan_capacity, push_expand, update_ranks_active)
 from .graph import Graph, build_hybrid
 from .pagerank import DeviceGraph, PRParams, as_device_graph, to_device
+from ..obs.spans import get_registry as _obs
 from ..obs.trace import trace_init, trace_record
 
 __all__ = ["forward_device_graph", "dfp_pagerank_compact",
@@ -187,15 +188,17 @@ def dfp_pagerank_compact(dg, fwd=None, r_prev=None,
                          batch: DeviceBatch = None,
                          params: PRParams = PRParams(),
                          trace: bool = False, health: bool = False):
-    dg, fwd = _stage_pair(dg, fwd)
-    return _df_like_compact(dg, fwd, r_prev, batch, params, prune=True,
-                            trace=trace, health=health)
+    with _obs().span("solve.dfp_compact", annotate=True):
+        dg, fwd = _stage_pair(dg, fwd)
+        return _df_like_compact(dg, fwd, r_prev, batch, params, prune=True,
+                                trace=trace, health=health)
 
 
 def df_pagerank_compact(dg, fwd=None, r_prev=None,
                         batch: DeviceBatch = None,
                         params: PRParams = PRParams(),
                         trace: bool = False, health: bool = False):
-    dg, fwd = _stage_pair(dg, fwd)
-    return _df_like_compact(dg, fwd, r_prev, batch, params, prune=False,
-                            trace=trace, health=health)
+    with _obs().span("solve.df_compact", annotate=True):
+        dg, fwd = _stage_pair(dg, fwd)
+        return _df_like_compact(dg, fwd, r_prev, batch, params, prune=False,
+                                trace=trace, health=health)

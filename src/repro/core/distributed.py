@@ -42,6 +42,7 @@ from .graph import (Graph, bucket_band_counts, build_hybrid_rows,
                     choose_bucket_widths, next_pow2)
 from .pagerank import EllBlock, PRParams
 from .rank_step import rank_step
+from ..obs.spans import get_registry as _obs
 from ..obs.trace import trace_init, trace_record
 
 try:  # JAX >= 0.4.35 spelling
@@ -476,7 +477,8 @@ def distributed_static_pagerank(mesh: Mesh, sg: ShardedGraph, r0: jnp.ndarray,
     fn = shard_map_loop(loop, mesh,
                         ({k: shard for k in _FIELDS}, shard, shard, shard),
                         tuple(out_specs))
-    return jax.jit(fn)(_as_dict(sg), r0, on, off)
+    with _obs().span("solve.static_1d", annotate=True):
+        return jax.jit(fn)(_as_dict(sg), r0, on, off)
 
 
 def sharded_frontier_caps(sg: ShardedGraph, est: int,
@@ -520,7 +522,8 @@ def distributed_dfp_pagerank(mesh: Mesh, sg: ShardedGraph, r_prev: jnp.ndarray,
     fn = shard_map_loop(loop, mesh,
                         ({k: shard for k in _FIELDS}, shard, shard, shard),
                         tuple(out_specs))
-    out = jax.jit(fn)(_as_dict(sg), r_prev, dv0, dn0)
+    with _obs().span("solve.dfp_1d", annotate=True):
+        out = jax.jit(fn)(_as_dict(sg), r_prev, dv0, dn0)
     if frontier_caps is not None:
         *out, fs = out
         publish_fstats(fs)

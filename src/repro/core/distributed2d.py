@@ -32,6 +32,7 @@ from .frontier import (FS_ACTIVE_ROWS, FS_COMPACT, FS_ITERS, FS_OVERFLOW,
 from .graph import Graph
 from .pagerank import PRParams
 from .rank_step import rank_step
+from ..obs.spans import get_registry as _obs
 from ..obs.trace import trace_init, trace_record
 
 __all__ = ["Sharded2D", "build_sharded_2d", "pagerank_2d", "dfp_2d"]
@@ -270,7 +271,8 @@ def pagerank_2d(mesh: Mesh, sg: Sharded2D, r0, params: PRParams = PRParams(),
     rc, blk = sg.out_deg.shape
     on = jnp.ones((rc, blk), jnp.bool_)
     off = jnp.zeros((rc, blk), jnp.bool_)
-    return _run(mesh, sg, r0, on, off, params, dfp=False, trace=trace)
+    with _obs().span("solve.static_2d", annotate=True):
+        return _run(mesh, sg, r0, on, off, params, dfp=False, trace=trace)
 
 
 def dfp_2d(mesh: Mesh, sg: Sharded2D, r_prev, dv0, dn0,
@@ -279,5 +281,6 @@ def dfp_2d(mesh: Mesh, sg: Sharded2D, r_prev, dv0, dn0,
     """2-D DF-P. ``row_cap`` (static pow2) compacts each device's
     destination loop to its mesh-row's active δ_V rows — identical ranks,
     O(row_cap·d_p) local edge work, full-block fallback on overflow."""
-    return _run(mesh, sg, r_prev, dv0, dn0, params, dfp=True, trace=trace,
-                row_cap=row_cap)
+    with _obs().span("solve.dfp_2d", annotate=True):
+        return _run(mesh, sg, r_prev, dv0, dn0, params, dfp=True, trace=trace,
+                    row_cap=row_cap)

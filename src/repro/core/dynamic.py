@@ -168,9 +168,14 @@ def nd_pagerank(dg, r_prev: jnp.ndarray, params: PRParams = PRParams(),
     with identical ranks/iters to the untraced call. ``health=True``
     additionally appends the solve's guard.health word (int32 bitmask,
     device-side) after the trace buffer.
+
+    Every driver dispatches under an annotated ``solve.<engine>`` span, so
+    its kernels land on the device timeline whenever a profiler trace is
+    live (ISSUE 10; the span times host dispatch only).
     """
-    return _nd_pagerank(as_device_graph(dg), r_prev, params, pull_sum_fn,
-                        trace, health)
+    with get_registry().span("solve.nd", annotate=True):
+        return _nd_pagerank(as_device_graph(dg), r_prev, params, pull_sum_fn,
+                            trace, health)
 
 
 @functools.partial(jax.jit, static_argnames=("params", "pull_sum_fn",
@@ -192,8 +197,9 @@ def dt_pagerank(dg, dg_prev, r_prev: jnp.ndarray, batch: DeviceBatch,
                 trace: bool = False, health: bool = False):
     """Dynamic Traversal (Desikan et al.): mark everything reachable from the
     updated vertices in G^{t-1} ∪ G^t, then iterate on that frozen set."""
-    return _dt_pagerank(as_device_graph(dg), as_device_graph(dg_prev),
-                        r_prev, batch, params, pull_sum_fn, trace, health)
+    with get_registry().span("solve.dt", annotate=True):
+        return _dt_pagerank(as_device_graph(dg), as_device_graph(dg_prev),
+                            r_prev, batch, params, pull_sum_fn, trace, health)
 
 
 @functools.partial(jax.jit, static_argnames=("params", "pull_sum_fn",
@@ -275,8 +281,9 @@ def df_pagerank(dg, r_prev: jnp.ndarray, batch: DeviceBatch,
     compacted execution path — active gather lists + push expansion, full
     sweep only on capacity overflow; identical results either way."""
     fwdd, caps = _resolve_frontier(dg, fwd, frontier_caps)
-    out = _df_pagerank(as_device_graph(dg), fwdd, r_prev, batch, params,
-                       pull_sum_fn, trace, caps, health)
+    with get_registry().span("solve.df", annotate=True):
+        out = _df_pagerank(as_device_graph(dg), fwdd, r_prev, batch, params,
+                           pull_sum_fn, trace, caps, health)
     return _publish(out, caps, trace)
 
 
@@ -299,8 +306,9 @@ def dfp_pagerank(dg, r_prev: jnp.ndarray, batch: DeviceBatch,
 
     See `df_pagerank` for the `frontier_caps` compacted path."""
     fwdd, caps = _resolve_frontier(dg, fwd, frontier_caps)
-    out = _dfp_pagerank(as_device_graph(dg), fwdd, r_prev, batch, params,
-                        pull_sum_fn, trace, caps, health)
+    with get_registry().span("solve.dfp", annotate=True):
+        out = _dfp_pagerank(as_device_graph(dg), fwdd, r_prev, batch, params,
+                            pull_sum_fn, trace, caps, health)
     return _publish(out, caps, trace)
 
 

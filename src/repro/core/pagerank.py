@@ -21,6 +21,7 @@ import numpy as np
 
 from .graph import Graph, HybridLayout, build_hybrid
 from .rank_step import rank_step
+from ..obs.spans import get_registry as _obs
 from ..obs.trace import trace_init, trace_record
 
 __all__ = [
@@ -212,8 +213,12 @@ def static_pagerank(dg, r0: jnp.ndarray, params: PRParams = PRParams(),
 
     `dg` may be a DeviceGraph or any pre-staged snapshot (see as_device_graph).
     """
-    return _static_pagerank(as_device_graph(dg), jnp.asarray(r0), params,
-                            pull_sum_fn, trace, health)
+    # every engine entry point dispatches under an annotated solve.* span,
+    # so kernels land on the device timeline whenever a profiler trace is
+    # live (ISSUE 10; the span itself times host dispatch only)
+    with _obs().span("solve.static", annotate=True):
+        return _static_pagerank(as_device_graph(dg), jnp.asarray(r0), params,
+                                pull_sum_fn, trace, health)
 
 
 @functools.partial(jax.jit, static_argnames=("params", "pull_sum_fn",

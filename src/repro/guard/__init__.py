@@ -68,6 +68,10 @@ class GuardConfig:
     #: with the full default iteration budget restored (so a chaos-starved
     #: ``max_iter=1`` session still recovers with a real solve)
     recovery_params: Optional[object] = None
+    #: where escalation-exhaustion post-mortem bundles land (DESIGN.md §14);
+    #: None falls back to the session's journal_dir, then
+    #: ``$REPRO_POSTMORTEM_DIR`` (unset: no bundle is written)
+    postmortem_dir: Optional[str] = None
 
     def __post_init__(self):
         if self.policy not in POLICIES:

@@ -12,16 +12,30 @@ splits — Figs. 1-5); this subsystem makes every one of them inspectable:
   * `report` — ``RunReport`` structured sink (JSON / JSONL) behind
     ``benchmarks.run``'s ``BENCH_obs.json``;
   * `check`  — ``python -m repro.obs.check`` regression gate diffing two
-    bench reports (see DESIGN.md §10).
+    bench reports (see DESIGN.md §10);
+  * `flight` — always-on bounded ring buffer of structured events (what
+    happened, in order — the post-failure record counters can't give);
+  * `hist`   — log-bucketed latency histograms (p50/p95/p99 per span),
+    ``SLOConfig`` breach budgets + on-demand profiler capture;
+  * `postmortem` — failure bundles (flight tail + health + trace + registry
+    snapshot), rendered by ``python -m repro.obs.postmortem`` (DESIGN §14).
 """
 from .trace import (ENGINE_IDS, ENGINE_NAMES, TraceBuffer, maybe_summary,
                     trace_init, trace_record, trace_summary)
 from .spans import Registry, Span, get_registry, reset_registry
 from .report import RunReport, load_report, validate_report
+from .flight import (FlightEvent, FlightRecorder, get_flight, obs_enabled,
+                     reset_flight, set_obs_enabled)
+from .hist import Histogram, SLOConfig, percentiles_from_samples
+from .postmortem import load_bundle, write_bundle
 
 __all__ = [
     "ENGINE_IDS", "ENGINE_NAMES", "TraceBuffer", "maybe_summary",
     "trace_init", "trace_record", "trace_summary",
     "Registry", "Span", "get_registry", "reset_registry",
     "RunReport", "load_report", "validate_report",
+    "FlightEvent", "FlightRecorder", "get_flight", "reset_flight",
+    "obs_enabled", "set_obs_enabled",
+    "Histogram", "SLOConfig", "percentiles_from_samples",
+    "write_bundle", "load_bundle",
 ]

@@ -10,14 +10,22 @@ serializes to
   * JSONL             — one object per line (header + one per benchmark),
     the append-friendly form for long-running collectors.
 
-Schema ``repro.obs/bench-v1`` (validated by `validate_report`):
+Schema ``repro.obs/bench-v2`` (validated by `validate_report`):
 
-  {"schema": "repro.obs/bench-v1", "name": ..., "created_unix": ...,
+  {"schema": "repro.obs/bench-v2", "name": ..., "created_unix": ...,
    "env": {"jax": ..., "backend": ..., "x64": ...},
-   "spans": {...}, "counters": {...},
+   "spans": {...}, "counters": {...}, "flight": {...},
    "benchmarks": [
      {"name": str, "us_min": float, "us_mean": float, "us_std": float,
+      "us_p50": float?, "us_p95": float?, "us_p99": float?, "us_max": float?,
       "derived": {str: str|float}, "trace": {...}|null}, ...]}
+
+v2 over v1 (ISSUE 10): span entries carry p50_s/p95_s/p99_s from the
+registry histograms, benchmark records may carry ``us_p50/us_p95/us_p99``
+tail-latency columns (present when the bench supplied per-sample data),
+and the header gains a ``flight`` recorder summary. ``load_report`` and
+``validate_report`` still accept v1 documents, so the gate can diff a v2
+run against a v1 baseline (percentile columns simply absent).
 """
 from __future__ import annotations
 
@@ -26,10 +34,15 @@ import json
 import time
 from typing import List, Optional
 
-__all__ = ["SCHEMA", "RunReport", "load_report", "validate_report",
-           "parse_derived"]
+__all__ = ["SCHEMA", "SCHEMA_V1", "RunReport", "load_report",
+           "validate_report", "parse_derived"]
 
-SCHEMA = "repro.obs/bench-v1"
+SCHEMA_V1 = "repro.obs/bench-v1"
+SCHEMA = "repro.obs/bench-v2"
+SCHEMAS = (SCHEMA, SCHEMA_V1)
+
+#: optional per-record tail-latency columns (microseconds)
+PCT_KEYS = ("us_p50", "us_p95", "us_p99", "us_max")
 
 
 def parse_derived(derived: str) -> dict:
@@ -68,18 +81,26 @@ class RunReport:
     benchmarks: List[dict] = dataclasses.field(default_factory=list)
     spans: dict = dataclasses.field(default_factory=dict)
     counters: dict = dataclasses.field(default_factory=dict)
+    flight: dict = dataclasses.field(default_factory=dict)
 
     def add(self, name: str, *, us_min: float, us_mean: float = None,
-            us_std: float = None, derived: Optional[dict] = None,
+            us_std: float = None, us_p50: float = None, us_p95: float = None,
+            us_p99: float = None, us_max: float = None,
+            derived: Optional[dict] = None,
             trace: Optional[dict] = None) -> None:
-        self.benchmarks.append({
+        rec = {
             "name": name,
             "us_min": float(us_min),
             "us_mean": float(us_min if us_mean is None else us_mean),
             "us_std": float(0.0 if us_std is None else us_std),
             "derived": derived or {},
             "trace": trace,
-        })
+        }
+        for k, v in (("us_p50", us_p50), ("us_p95", us_p95),
+                     ("us_p99", us_p99), ("us_max", us_max)):
+            if v is not None:
+                rec[k] = float(v)
+        self.benchmarks.append(rec)
 
     def attach_registry(self, registry=None) -> None:
         """Snapshot the span/counter registry into the report."""
@@ -90,11 +111,18 @@ class RunReport:
         self.spans = rep["spans"]
         self.counters = rep["counters"]
 
+    def attach_flight(self, recorder=None) -> None:
+        """Snapshot the flight recorder's summary into the report."""
+        if recorder is None:
+            from .flight import get_flight
+            recorder = get_flight()
+        self.flight = recorder.summary()
+
     def to_dict(self) -> dict:
         return {"schema": SCHEMA, "name": self.name,
                 "created_unix": self.created_unix, "env": self.env,
                 "spans": self.spans, "counters": self.counters,
-                "benchmarks": self.benchmarks}
+                "flight": self.flight, "benchmarks": self.benchmarks}
 
     def write_json(self, path: str) -> None:
         with open(path, "w") as f:
@@ -138,8 +166,8 @@ def validate_report(doc: dict) -> List[str]:
     errs = []
     if not isinstance(doc, dict):
         return ["report is not an object"]
-    if doc.get("schema") != SCHEMA:
-        errs.append(f"schema != {SCHEMA!r}: {doc.get('schema')!r}")
+    if doc.get("schema") not in SCHEMAS:
+        errs.append(f"schema not in {SCHEMAS!r}: {doc.get('schema')!r}")
     benches = doc.get("benchmarks")
     if not isinstance(benches, list):
         return errs + ["benchmarks is not a list"]
@@ -153,6 +181,9 @@ def validate_report(doc: dict) -> List[str]:
         for k in ("us_min", "us_mean", "us_std"):
             if not isinstance(b.get(k), (int, float)):
                 errs.append(f"{where}.{k} missing or non-numeric")
+        for k in PCT_KEYS:  # v2 optional tail-latency columns
+            if k in b and not isinstance(b[k], (int, float)):
+                errs.append(f"{where}.{k} non-numeric")
         tr = b.get("trace")
         if tr is not None:
             if not isinstance(tr, dict):

@@ -29,6 +29,9 @@ import time
 from contextlib import contextmanager
 from typing import Dict, Optional
 
+from .flight import obs_enabled
+from .hist import Histogram
+
 __all__ = ["SpanStats", "Registry", "Span", "get_registry", "reset_registry"]
 
 try:  # optional: device-timeline annotation when a profiler trace is live
@@ -67,6 +70,9 @@ class Registry:
         self._lock = threading.Lock()
         self._spans: Dict[str, SpanStats] = {}
         self._counters: Dict[str, int] = {}
+        #: per-span latency histograms (obs.hist) — the p50/p95/p99 source;
+        #: fed alongside SpanStats unless REPRO_OBS_OFF gates them off
+        self._hists: Dict[str, Histogram] = {}
 
     # -- counters ------------------------------------------------------------
 
@@ -98,19 +104,52 @@ class Registry:
                 if st is None:
                     st = self._spans[name] = SpanStats()
                 st.add(dt)
+                if obs_enabled():
+                    h = self._hists.get(name)
+                    if h is None:
+                        h = self._hists[name] = Histogram()
+                    h.add(dt)
 
     def span_stats(self, name: str) -> Optional[SpanStats]:
         with self._lock:
             return self._spans.get(name)
 
+    def span_hist(self, name: str) -> Optional[Histogram]:
+        """The span's latency histogram (None before its first timed pass
+        or when the always-on layer is off)."""
+        with self._lock:
+            return self._hists.get(name)
+
+    def record_hist(self, name: str, seconds: float) -> None:
+        """Feed one latency sample into ``name``'s histogram without timing
+        a span (callers that already hold the wall-clock, e.g. per-batch
+        session accounting)."""
+        if not obs_enabled():
+            return
+        with self._lock:
+            h = self._hists.get(name)
+            if h is None:
+                h = self._hists[name] = Histogram()
+            h.add(seconds)
+
     # -- export --------------------------------------------------------------
 
     def report(self) -> dict:
-        """{"spans": {name: {...}}, "counters": {name: n}} snapshot."""
+        """{"spans": {name: {...}}, "counters": {name: n}} snapshot. Span
+        entries carry p50_s/p95_s/p99_s from the attached histogram when
+        one exists (always-on layer enabled)."""
         with self._lock:
+            spans = {}
+            for k, v in sorted(self._spans.items()):
+                d = v.as_dict()
+                h = self._hists.get(k)
+                if h is not None and h.count:
+                    hd = h.as_dict()
+                    d.update(p50_s=hd["p50_s"], p95_s=hd["p95_s"],
+                             p99_s=hd["p99_s"])
+                spans[k] = d
             return {
-                "spans": {k: v.as_dict() for k, v in
-                          sorted(self._spans.items())},
+                "spans": spans,
                 "counters": dict(sorted(self._counters.items())),
             }
 
@@ -118,6 +157,7 @@ class Registry:
         with self._lock:
             self._spans.clear()
             self._counters.clear()
+            self._hists.clear()
 
 
 class Span:

@@ -33,6 +33,7 @@ the newest checkpoint plus a journal replay.
 from __future__ import annotations
 
 import dataclasses
+import os
 import time
 from typing import List, Optional, Tuple
 
@@ -55,6 +56,9 @@ from ..guard.journal import (DeltaJournal, JournalRecord, journal_path,
                              load_session_checkpoint,
                              save_session_checkpoint)
 from ..guard.validate import validate_batch
+from ..obs.flight import get_flight
+from ..obs.hist import Histogram, SLOConfig, start_profiler, stop_profiler
+from ..obs.postmortem import write_bundle
 from ..obs.spans import get_registry as _obs
 from ..obs.trace import maybe_summary
 from .delta import Delta, ingest
@@ -154,6 +158,7 @@ class StreamSession:
                  prune: bool = True, compact_threshold: float = 0.015,
                  snapshot=None, mesh=None, trace: bool = False,
                  guard: Optional[GuardConfig] = None,
+                 slo: Optional[SLOConfig] = None,
                  journal_dir: Optional[str] = None,
                  checkpoint_every: int = 0, **snap_kw):
         if engine not in ("auto", "dense", "compact"):
@@ -176,6 +181,7 @@ class StreamSession:
         self.compact_threshold = compact_threshold
         self.mesh = mesh
         self.guard = guard
+        self.slo = slo
         self.journal_dir = journal_dir
         self.checkpoint_every = checkpoint_every
         self._snap_kw = dict(snap_kw)
@@ -202,6 +208,20 @@ class StreamSession:
         self._replaying = False
         self._journal = (DeltaJournal(journal_path(journal_dir))
                          if journal_dir is not None else None)
+        #: per-session solve-latency histogram (the SLO judges THIS stream's
+        #: p99, not the process-wide registry shared across sessions)
+        self._solve_hist = Histogram()
+        #: profiler-capture state machine: ``_capture_remaining`` batches
+        #: still to run under an armed/active trace, ``_capture_active``
+        #: while jax.profiler is recording. One automatic arm per session
+        #: (``_slo_captured``); re-arm explicitly via `arm_capture`.
+        self._capture_remaining = 0
+        self._capture_active = False
+        self._capture_dir: Optional[str] = None
+        self._slo_captured = False
+        #: quarantine summary of the most recent non-clean ingest (bundles
+        #: embed it: the poisoned batch is usually the story)
+        self._last_quarantine: Optional[dict] = None
 
     @property
     def n(self) -> int:
@@ -217,6 +237,7 @@ class StreamSession:
         """Apply Δ^t and return the new rank vector (device-resident;
         stacked [nd, n_loc] in mesh mode — see `flat_ranks`)."""
         obs = _obs()
+        flight = get_flight()
         t0 = time.perf_counter()
         with obs.span("session.ingest"):
             quarantined = 0
@@ -227,6 +248,13 @@ class StreamSession:
                           else "raise")
                 batch, report = validate_batch(batch, self.n, policy=policy)
                 quarantined = report.size
+                if quarantined:
+                    self._last_quarantine = {
+                        "size": int(report.size),
+                        "deletions": int(report.del_src.size),
+                        "insertions": int(report.ins_src.size)}
+                    flight.emit("guard.quarantine", seq=self._batch_idx + 1,
+                                dropped=int(report.size))
                 delta = ingest(batch, self.n)
             db = delta.to_device() if delta.size else None
         ingest_s = time.perf_counter() - t0
@@ -252,10 +280,13 @@ class StreamSession:
         t1 = time.perf_counter()
         engine = self._choose_engine(delta)
         obs.inc(f"session.engine.{engine}")
+        flight.emit("session.engine", seq=seq, engine=engine,
+                    size=delta.size)
         caps = self._frontier_caps(frontier_estimate(delta,
                                                      self.snap._outdeg))
         guarded = self.guard is not None
         r_pre = self.ranks
+        self._maybe_capture_start()
         with obs.span("session.solve", annotate=True):
             if engine == "sharded":
                 dv0, dn0 = initial_affected_sharded(
@@ -284,9 +315,12 @@ class StreamSession:
             escalations = 0
             if guarded and hw != HEALTH_OK:
                 r, iters, escalations = self._escalate(r_pre, db, hw,
-                                                       r, iters)
+                                                       r, iters,
+                                                       summary=summary,
+                                                       seq=seq)
             r = jax.block_until_ready(r)
         solve_s = time.perf_counter() - t1
+        self._maybe_capture_stop()
 
         self.ranks = r
         self._batch_idx = seq
@@ -295,6 +329,12 @@ class StreamSession:
             ingest_s=ingest_s, snapshot=snap_stats, solve_s=solve_s,
             trace=summary, health=hw, escalations=escalations,
             quarantined=quarantined))
+        self._solve_hist.add(solve_s)
+        flight.emit("session.batch", seq=seq, engine=engine,
+                    size=delta.size, iters=iters,
+                    solve_us=round(solve_s * 1e6, 1), health=hw,
+                    escalations=escalations)
+        self._check_slo()
         if (self.guard is not None and self.guard.audit_every
                 and self._batch_idx % self.guard.audit_every == 0):
             self._audit()
@@ -303,6 +343,73 @@ class StreamSession:
                 and self._batch_idx % self.checkpoint_every == 0):
             self.checkpoint()
         return self.ranks
+
+    # -- SLO + on-demand profiler capture (DESIGN.md §14) --------------------
+
+    def solve_percentiles(self) -> dict:
+        """Percentile snapshot of this session's per-batch solve latency
+        (seconds): ``{count, p50_s, p95_s, p99_s, max_s}``."""
+        return self._solve_hist.as_dict()
+
+    def arm_capture(self, batches: int, log_dir: Optional[str] = None
+                    ) -> None:
+        """Arm ``jax.profiler`` trace capture around the next ``batches``
+        applies (manual re-arm of the SLO auto-capture)."""
+        self._capture_remaining = max(int(batches), 0)
+        if log_dir is not None:
+            self._capture_dir = log_dir
+
+    def _capture_log_dir(self) -> str:
+        if self._capture_dir is not None:
+            return self._capture_dir
+        if self.slo is not None and self.slo.capture_dir is not None:
+            return self.slo.capture_dir
+        base = self.journal_dir if self.journal_dir is not None else "."
+        return os.path.join(base, "profile")
+
+    def _maybe_capture_start(self) -> None:
+        if self._capture_remaining <= 0 or self._capture_active:
+            return
+        log_dir = self._capture_log_dir()
+        if start_profiler(log_dir):
+            self._capture_active = True
+            _obs().inc("slo.capture.start")
+            get_flight().emit("slo.capture.start", dir=log_dir,
+                              batches=self._capture_remaining)
+        else:
+            # profiler unavailable on this backend: disarm rather than
+            # retrying (and failing) on every subsequent batch
+            self._capture_remaining = 0
+            _obs().inc("slo.capture.unavailable")
+
+    def _maybe_capture_stop(self) -> None:
+        if not self._capture_active:
+            return
+        self._capture_remaining -= 1
+        if self._capture_remaining > 0:
+            return
+        self._capture_active = False
+        stop_profiler()
+        _obs().inc("slo.capture.stop")
+        get_flight().emit("slo.capture.stop")
+
+    def _check_slo(self) -> None:
+        """Judge the running solve p99 against the session's SLOConfig;
+        on breach bump counters, emit a flight event, and (once per
+        session) auto-arm profiler capture for the next batches."""
+        s = self.slo
+        if s is None or self._solve_hist.count < max(int(s.min_samples), 1):
+            return
+        p99 = self._solve_hist.percentile(99)
+        if p99 is None or p99 * 1e6 <= s.solve_p99_us:
+            return
+        _obs().inc("slo.breach.solve_p99")
+        get_flight().emit("slo.breach", metric="solve_p99",
+                          p99_us=round(p99 * 1e6, 1),
+                          budget_us=s.solve_p99_us)
+        if s.capture_batches > 0 and not self._slo_captured:
+            self._slo_captured = True
+            self.arm_capture(s.capture_batches)
 
     # -- guard: escalation ladder + drift audit ------------------------------
 
@@ -330,7 +437,9 @@ class StreamSession:
         # with a real solve
         return self.params._replace(max_iter=PRParams().max_iter)
 
-    def _escalate(self, r_pre, db, hw: int, r, iters: int):
+    def _escalate(self, r_pre, db, hw: int, r, iters: int,
+                  summary: Optional[dict] = None,
+                  seq: Optional[int] = None):
         """Walk the recovery ladder after an unhealthy solve.
 
         Rung 1 retries the batch with the *recovery* params (full iteration
@@ -341,8 +450,10 @@ class StreamSession:
         state. Each rung's result is accepted only if ITS health word is
         clean; ``retry_budget`` bounds the rungs walked. Returns
         ``(ranks, iters, rungs_walked)`` — on an exhausted budget, the last
-        attempt's result (counted in ``guard.escalate.exhausted``)."""
+        attempt's result (counted in ``guard.escalate.exhausted``) plus a
+        post-mortem bundle under `_postmortem_dir` (DESIGN.md §14)."""
         obs = _obs()
+        flight = get_flight()
         obs.inc("guard.unhealthy")
         for name in health_flags(hw):
             obs.inc(f"guard.health.{name}")
@@ -350,9 +461,11 @@ class StreamSession:
         rungs = (["sharded"] if self.mesh is not None else ["dense"])
         rungs.append("recompute")
         walked = 0
+        hw2 = hw
         for rung in rungs[:max(int(self.guard.retry_budget), 0)]:
             walked += 1
             obs.inc(f"guard.escalate.{rung}")
+            flight.emit("guard.escalate", rung=rung, seq=seq, health=hw)
             if rung == "dense":
                 fn = dfp_pagerank if self.prune else df_pagerank
                 r, it, hw2 = fn(self.snap, r_pre, db, rp, health=True)
@@ -369,7 +482,27 @@ class StreamSession:
                 obs.inc("guard.escalate.success")
                 return r, iters, walked
         obs.inc("guard.escalate.exhausted")
+        flight.emit("guard.escalate.exhausted", seq=seq, health=int(hw2))
+        pdir = self._postmortem_dir()
+        if pdir is not None:
+            write_bundle(pdir, reason="escalation_exhausted",
+                         health=int(hw2), trace=summary,
+                         quarantine=self._last_quarantine,
+                         journal_seq=seq,
+                         extra={"first_health": int(hw),
+                                "rungs_walked": walked,
+                                "slo": self._solve_hist.as_dict()})
         return r, iters, walked
+
+    def _postmortem_dir(self) -> Optional[str]:
+        """Where failure bundles land: ``GuardConfig.postmortem_dir``, else
+        the journal directory, else ``$REPRO_POSTMORTEM_DIR``; None disables
+        bundle writing (no sensible destination)."""
+        if self.guard is not None and self.guard.postmortem_dir is not None:
+            return self.guard.postmortem_dir
+        if self.journal_dir is not None:
+            return self.journal_dir
+        return os.environ.get("REPRO_POSTMORTEM_DIR") or None
 
     def _audit(self) -> None:
         """Every-K-batches drift audit: chained ranks vs a from-scratch
@@ -383,7 +516,10 @@ class StreamSession:
         r_ref = self._static_solve(params=self._recovery_params())[0]
         l1 = float(jnp.sum(jnp.abs(self.flat_ranks()
                                    - self._flatten(r_ref))))
-        if l1 > self.guard.audit_tol:
+        resync = l1 > self.guard.audit_tol
+        get_flight().emit("guard.audit", seq=self._batch_idx, l1=l1,
+                          resync=resync)
+        if resync:
             obs.inc("guard.audit.resync")
             self.ranks = r_ref
 
@@ -407,13 +543,17 @@ class StreamSession:
             gd["recovery_params"] = (list(g.recovery_params)
                                      if g.recovery_params is not None
                                      else None)
+        slo = (dataclasses.asdict(self.slo) if self.slo is not None
+               else None)
+        if slo is not None and slo["solve_p99_us"] == float("inf"):
+            slo["solve_p99_us"] = None  # JSON has no inf
         return dict(n=self.n, params=list(self.params),
                     d_p=self._d_p, tile=self._tile, engine=self.engine,
                     prune=self.prune,
                     compact_threshold=self.compact_threshold,
                     trace=self.trace, mesh=self.mesh is not None,
                     checkpoint_every=self.checkpoint_every,
-                    guard=gd, snap_kw=dict(self._snap_kw))
+                    guard=gd, slo=slo, snap_kw=dict(self._snap_kw))
 
     def checkpoint(self) -> str:
         """Write a full-state checkpoint (ranks + snapshot mirrors + config)
@@ -426,8 +566,11 @@ class StreamSession:
         arrays["ranks"] = np.asarray(self.ranks)
         extra = {"snap": snap_extra, "session": self._session_config(),
                  "frontier_caps": _caps_to_json(self._caps)}
-        return save_session_checkpoint(self.journal_dir, self._batch_idx,
+        path = save_session_checkpoint(self.journal_dir, self._batch_idx,
                                        arrays, extra)
+        get_flight().emit("guard.checkpoint", seq=self._batch_idx,
+                          path=path)
+        return path
 
     @classmethod
     def restore(cls, directory: str, mesh=None) -> "StreamSession":
@@ -445,6 +588,18 @@ class StreamSession:
 
         ``mesh`` must be re-supplied for sharded sessions (meshes don't
         serialize)."""
+        try:
+            return cls._restore_impl(directory, mesh)
+        except Exception as e:
+            # a failed recovery is the post-mortem case par excellence:
+            # bundle the flight tail + registry before re-raising (the
+            # write is best-effort and never masks the original error)
+            write_bundle(directory, reason="restore_failed",
+                         extra={"error": repr(e)})
+            raise
+
+    @classmethod
+    def _restore_impl(cls, directory: str, mesh) -> "StreamSession":
         arrays, extra, step = load_session_checkpoint(directory)
         cfg = extra["session"]
         if cfg["mesh"] and mesh is None:
@@ -458,12 +613,19 @@ class StreamSession:
             if gd.get("recovery_params") is not None:
                 gd["recovery_params"] = PRParams(*gd["recovery_params"])
             guard = GuardConfig(**gd)
+        slo = None
+        if cfg.get("slo") is not None:
+            sd = dict(cfg["slo"])
+            if sd.get("solve_p99_us") is None:
+                sd["solve_p99_us"] = float("inf")
+            slo = SLOConfig(**sd)
         g = graph_from_sorted_keys(
             int(cfg["n"]), np.ascontiguousarray(arrays["keys"]))
         sess = cls(g, params=params, d_p=cfg["d_p"], tile=cfg["tile"],
                    engine=cfg["engine"], prune=cfg["prune"],
                    compact_threshold=cfg["compact_threshold"], mesh=mesh,
-                   trace=cfg["trace"], guard=guard, journal_dir=directory,
+                   trace=cfg["trace"], guard=guard, slo=slo,
+                   journal_dir=directory,
                    checkpoint_every=cfg["checkpoint_every"],
                    **cfg.get("snap_kw", {}))
         sess.snap.load_state(arrays, extra["snap"])
@@ -472,6 +634,7 @@ class StreamSession:
         sess._caps = _caps_from_json(extra.get("frontier_caps"))
         records, _ = DeltaJournal.scan(journal_path(directory))
         sess._replaying = True
+        replayed = 0
         try:
             for rec in records:
                 if rec.seq <= step:
@@ -482,9 +645,11 @@ class StreamSession:
                     ins_src=rec.ins_src.astype(np.int64),
                     ins_dst=rec.ins_dst.astype(np.int64)))
                 sess._batch_idx = rec.seq
+                replayed += 1
         finally:
             sess._replaying = False
         _obs().inc("guard.restores")
+        get_flight().emit("guard.restore", step=step, replayed=replayed)
         return sess
 
     def close(self) -> None:

@@ -43,6 +43,7 @@ from ..core.distributed import (ShardedGraph, shard_block_rows, shard_bounds,
 from ..core.graph import (Graph, build_hybrid_rows, choose_bucket_widths,
                           edge_keys, graph_from_sorted_keys, next_pow2)
 from ..core.pagerank import EllBlock
+from ..obs.flight import get_flight
 from ..obs.spans import get_registry as _obs
 from .delta import Delta
 from .snapshot import (CapacityError, SnapshotStats, _HalfLayout, _pad_rows,
@@ -246,6 +247,8 @@ class ShardedSnapshot:
                 self._rebuild(reason)
             obs.inc("snapshot.rebuilds")
             obs.inc(f"snapshot.rebuild.{reason.split(':')[0]}")
+            get_flight().emit("snapshot.rebuild", reason=reason,
+                              sharded=True)
             stats.rebuilt, stats.rebuild_reason = True, reason
             stats.host_s = time.perf_counter() - t0
             return stats
@@ -265,6 +268,8 @@ class ShardedSnapshot:
                 self._rebuild(f"capacity:{e}")
             obs.inc("snapshot.rebuilds")
             obs.inc("snapshot.rebuild.capacity")
+            get_flight().emit("snapshot.rebuild", reason=f"capacity:{e}",
+                              sharded=True)
             stats.rebuilt, stats.rebuild_reason = True, f"capacity:{e}"
             stats.host_s = time.perf_counter() - t0
             return stats

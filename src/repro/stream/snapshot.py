@@ -48,6 +48,7 @@ from ..core.graph import (Graph, HybridLayout, bucket_band_counts,
                           build_hybrid, choose_bucket_widths, edge_keys,
                           graph_from_sorted_keys, keys_to_edges)
 from ..core.pagerank import DeviceGraph, EllBlock
+from ..obs.flight import get_flight
 from ..obs.spans import get_registry as _obs
 from .delta import Delta, next_pow2
 
@@ -742,6 +743,7 @@ class DeviceSnapshot:
                 self._rebuild(reason)
             obs.inc("snapshot.rebuilds")
             obs.inc(f"snapshot.rebuild.{reason.split(':')[0]}")
+            get_flight().emit("snapshot.rebuild", reason=reason)
             stats.rebuilt, stats.rebuild_reason = True, reason
             stats.host_s = time.perf_counter() - t0
             return stats
@@ -761,6 +763,7 @@ class DeviceSnapshot:
                 self._rebuild(f"capacity:{e}")
             obs.inc("snapshot.rebuilds")
             obs.inc("snapshot.rebuild.capacity")
+            get_flight().emit("snapshot.rebuild", reason=f"capacity:{e}")
             stats.rebuilt, stats.rebuild_reason = True, f"capacity:{e}"
             stats.host_s = time.perf_counter() - t0
             return stats

@@ -1,0 +1,390 @@
+"""repro.obs v2 (ISSUE 10): flight recorder, latency histograms + SLOs,
+machine-readable regression verdicts, and post-mortem bundles.
+
+Invariants under test:
+
+  * the flight ring is bounded, thread-safe, and exact about what it
+    dropped — seq numbers never lie, even under concurrent writers;
+  * histograms report percentiles within their documented relative error
+    and the span registry surfaces them in ``report()``;
+  * the bench report schema bump (v1 -> v2) is backward compatible in both
+    the loader and the gate, and the gate fails on p99-only regressions;
+  * ``guard.health`` decode strings are stable (operators grep for them);
+  * an SLO breach arms profiler capture around the next batches;
+  * escalation-ladder exhaustion and restore failure each produce a bundle
+    that ``python -m repro.obs.postmortem`` renders.
+"""
+import json
+import os
+import subprocess
+import sys
+import threading
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+import repro.stream.session as session_mod
+from repro.core.graph import random_batch, random_graph
+from repro.guard import (ChaosMonkey, GuardConfig, H_MASS_DRIFT, H_MAX_ITER,
+                         H_NONFINITE, describe_health, health_flags)
+from repro.obs import (FlightRecorder, Histogram, RunReport, SLOConfig,
+                       get_flight, load_bundle, load_report, obs_enabled,
+                       reset_flight, set_obs_enabled, validate_report,
+                       write_bundle)
+from repro.obs import postmortem
+from repro.obs.check import main as check_main
+from repro.obs.report import SCHEMA, SCHEMA_V1
+from repro.obs.spans import get_registry, reset_registry
+from repro.stream import StreamSession
+
+N, M = 512, 4096
+
+
+@pytest.fixture()
+def g():
+    return random_graph(N, M, seed=0)
+
+
+@pytest.fixture(autouse=True)
+def _fresh_obs():
+    reset_registry()
+    reset_flight()
+    set_obs_enabled(True)
+    yield
+    reset_registry()
+    reset_flight()
+    set_obs_enabled(True)
+
+
+# ---------------------------------------------------------------------------
+# flight recorder
+# ---------------------------------------------------------------------------
+
+def test_flight_ring_wraparound():
+    fl = FlightRecorder(capacity=8)
+    for i in range(20):
+        fl.emit("tick", i=i)
+    assert len(fl) == 8
+    assert fl.total == 20
+    assert fl.dropped == 12
+    evs = fl.events()
+    assert [e.seq for e in evs] == list(range(12, 20))  # newest window
+    assert [e.data["i"] for e in evs] == list(range(12, 20))
+    assert [e.seq for e in fl.tail(3)] == [17, 18, 19]
+    s = fl.summary()
+    assert s == {"total": 20, "dropped": 12, "capacity": 8,
+                 "by_kind": {"tick": 20}}
+
+
+def test_flight_concurrent_writers():
+    """Wraparound under concurrent emits: no lost counts, no duplicate or
+    out-of-order seq numbers in the surviving window."""
+    fl = FlightRecorder(capacity=64)
+    threads, per = 8, 200
+
+    def writer(t):
+        for i in range(per):
+            fl.emit(f"kind{t}", i=i)
+
+    ts = [threading.Thread(target=writer, args=(t,)) for t in range(threads)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    assert fl.total == threads * per
+    assert fl.dropped == threads * per - 64
+    seqs = [e.seq for e in fl.events()]
+    assert seqs == sorted(seqs) and len(set(seqs)) == len(seqs) == 64
+    assert sum(fl.summary()["by_kind"].values()) == threads * per
+
+
+def test_obs_enabled_toggle():
+    fl = FlightRecorder()
+    set_obs_enabled(False)
+    assert not obs_enabled()
+    fl.emit("tick")
+    assert fl.total == 0
+    with get_registry().span("toggle.span"):
+        pass
+    assert get_registry().span_hist("toggle.span") is None  # hists gated
+    assert get_registry().span_stats("toggle.span").count == 1  # spans not
+    set_obs_enabled(True)
+    fl.emit("tick")
+    assert fl.total == 1
+
+
+# ---------------------------------------------------------------------------
+# histograms + registry percentiles
+# ---------------------------------------------------------------------------
+
+def test_histogram_percentiles_within_bucket_error():
+    h = Histogram()
+    vals = [i / 1000.0 for i in range(1, 1001)]  # 1ms..1s uniform
+    for v in vals:
+        h.add(v)
+    assert h.count == 1000
+    # log-bucketed: <= ~6.6% relative error at 36 buckets/decade, and the
+    # report is clamped to the observed range
+    assert h.percentile(50) == pytest.approx(0.5, rel=0.08)
+    assert h.percentile(99) == pytest.approx(0.99, rel=0.08)
+    assert h.percentile(100) == 1.0
+    d = h.as_dict()
+    assert d["count"] == 1000 and d["max_s"] == 1.0
+    assert d["p50_s"] <= d["p95_s"] <= d["p99_s"] <= d["max_s"]
+
+
+def test_histogram_empty_and_garbage():
+    h = Histogram()
+    assert h.percentile(99) is None
+    assert h.as_dict() == {"count": 0}
+    h.add(float("nan"))
+    h.add(-1.0)
+    assert h.count == 0  # not latencies
+
+
+def test_histogram_merge():
+    a, b = Histogram(), Histogram()
+    for v in (0.001, 0.002):
+        a.add(v)
+    for v in (0.004, 0.008):
+        b.add(v)
+    a.merge(b)
+    assert a.count == 4
+    assert a.max == 0.008
+    assert a.percentile(100) == 0.008
+
+
+def test_registry_spans_carry_percentiles():
+    reg = get_registry()
+    for _ in range(10):
+        with reg.span("pct.work"):
+            pass
+    rep = reg.report()["spans"]["pct.work"]
+    assert rep["count"] == 10
+    for k in ("p50_s", "p95_s", "p99_s"):
+        assert isinstance(rep[k], float) and rep[k] >= 0.0
+    assert rep["p50_s"] <= rep["p99_s"] <= rep["max_s"] * 1.07  # bucket slack
+
+
+# ---------------------------------------------------------------------------
+# report schema v2 + the check gate
+# ---------------------------------------------------------------------------
+
+def test_report_v2_roundtrip_with_flight(tmp_path):
+    get_flight().emit("roundtrip", n=1)
+    rep = RunReport(name="t")
+    rep.add("x/one", us_min=10.0, us_mean=12.0, us_p50=11.0, us_p95=14.0,
+            us_p99=15.0, us_max=16.0)
+    rep.add("x/two", us_min=5.0)  # percentiles optional per record
+    rep.attach_registry()
+    rep.attach_flight()
+    p = tmp_path / "r.json"
+    rep.write_json(str(p))
+    doc = load_report(str(p))
+    assert doc["schema"] == SCHEMA
+    assert validate_report(doc) == []
+    assert doc["flight"]["by_kind"]["roundtrip"] == 1
+    one = next(b for b in doc["benchmarks"] if b["name"] == "x/one")
+    assert one["us_p99"] == 15.0
+    assert "us_p99" not in next(b for b in doc["benchmarks"]
+                                if b["name"] == "x/two")
+
+
+def test_report_v1_still_validates():
+    doc = {"schema": SCHEMA_V1, "name": "old", "benchmarks": [
+        {"name": "a", "us_min": 1.0, "us_mean": 1.0, "us_std": 0.0}]}
+    assert validate_report(doc) == []
+    assert validate_report({"schema": "nope", "benchmarks": []})
+
+
+def _write_report(path, rows, schema=SCHEMA):
+    doc = {"schema": schema, "name": "t", "created_unix": 0.0, "env": {},
+           "spans": {}, "counters": {}, "flight": {},
+           "benchmarks": [
+               {"name": n, "us_min": m, "us_mean": m, "us_std": 0.0,
+                **extra} for n, m, extra in rows]}
+    Path(path).write_text(json.dumps(doc))
+
+
+def test_check_gates_p99_only_regression(tmp_path, capsys):
+    """Mean holds, tail doubles: v2 gate must fail — and say so in the
+    --json verdict document."""
+    base, cur = tmp_path / "base.json", tmp_path / "cur.json"
+    _write_report(base, [("s/a", 100.0, {"us_p99": 200.0})])
+    _write_report(cur, [("s/a", 100.0, {"us_p99": 400.0})])
+    rc = check_main([str(cur), str(base), "--threshold", "0.5"])
+    out = capsys.readouterr().out
+    assert rc == 1 and "p99" in out
+    rc = check_main([str(cur), str(base), "--threshold", "0.5", "--json"])
+    doc = json.loads(capsys.readouterr().out)
+    assert rc == 1 and doc["verdict"] == "fail"
+    assert any("p99" in f for f in doc["failures"])
+    (rec,) = doc["benchmarks"]
+    assert rec["status"] == "regression" and rec["p99_ratio"] == 2.0
+    # identical tails pass (and the verdict says so)
+    _write_report(cur, [("s/a", 100.0, {"us_p99": 200.0})])
+    rc = check_main([str(cur), str(base), "--threshold", "0.5", "--json"])
+    doc = json.loads(capsys.readouterr().out)
+    assert rc == 0 and doc["verdict"] == "pass" and doc["failures"] == []
+
+
+def test_check_v1_baseline_no_p99_gate(tmp_path, capsys):
+    """v2 current vs v1 baseline: percentile columns absent on one side are
+    simply not gated (the compat contract)."""
+    base, cur = tmp_path / "base.json", tmp_path / "cur.json"
+    _write_report(base, [("s/a", 100.0, {})], schema=SCHEMA_V1)
+    _write_report(cur, [("s/a", 100.0, {"us_p99": 9999.0})])
+    assert check_main([str(cur), str(base), "--threshold", "0.1"]) == 0
+    capsys.readouterr()
+
+
+def test_seed_report_is_v2_with_percentiles():
+    seed = (Path(__file__).resolve().parents[1] / "benchmarks" / "seed"
+            / "BENCH_obs_seed.json")
+    doc = load_report(str(seed))
+    assert doc["schema"] == SCHEMA
+    assert validate_report(doc) == []
+    assert any("us_p99" in b for b in doc["benchmarks"])
+
+
+# ---------------------------------------------------------------------------
+# health decode strings (operators grep for these)
+# ---------------------------------------------------------------------------
+
+def test_health_decode_strings_are_stable():
+    assert describe_health(0) == "ok"
+    assert describe_health(H_MAX_ITER) == "max_iter"
+    assert describe_health(H_NONFINITE) == "nonfinite"
+    assert describe_health(H_MASS_DRIFT) == "mass_drift"
+    assert describe_health(H_MAX_ITER | H_NONFINITE) == "max_iter+nonfinite"
+    assert describe_health(H_MAX_ITER | H_NONFINITE | H_MASS_DRIFT) == \
+        "max_iter+nonfinite+mass_drift"
+    assert health_flags(0) == ()
+    assert health_flags(H_NONFINITE | H_MASS_DRIFT) == ("nonfinite",
+                                                        "mass_drift")
+
+
+# ---------------------------------------------------------------------------
+# SLO breach -> profiler capture
+# ---------------------------------------------------------------------------
+
+def test_slo_breach_arms_profiler_capture(g, monkeypatch):
+    calls = {"start": [], "stop": 0}
+    monkeypatch.setattr(session_mod, "start_profiler",
+                        lambda d: calls["start"].append(d) or True)
+    monkeypatch.setattr(session_mod, "stop_profiler",
+                        lambda: calls.__setitem__("stop", calls["stop"] + 1)
+                        or True)
+    sess = StreamSession(g, slo=SLOConfig(solve_p99_us=0.0, min_samples=1,
+                                          capture_batches=2,
+                                          capture_dir="ignored-dir"))
+    for seed in range(4):
+        sess.apply(random_batch(g, 16, seed=seed))
+    obs = get_registry()
+    assert obs.counter("slo.breach.solve_p99") >= 1
+    # one auto-arm per session: exactly one start/stop pair spanning the
+    # two batches after the first breach
+    assert calls["start"] == ["ignored-dir"]
+    assert calls["stop"] == 1
+    assert obs.counter("slo.capture.start") == 1
+    assert obs.counter("slo.capture.stop") == 1
+    kinds = [e.kind for e in get_flight().events()]
+    assert "slo.breach" in kinds
+    assert "slo.capture.start" in kinds and "slo.capture.stop" in kinds
+    # p99 visible to callers
+    pct = sess.solve_percentiles()
+    assert pct["count"] == 4 and pct["p99_s"] > 0
+
+
+def test_slo_quiet_when_under_budget(g):
+    sess = StreamSession(g, slo=SLOConfig(solve_p99_us=1e12, min_samples=1))
+    sess.apply(random_batch(g, 16, seed=1))
+    assert get_registry().counter("slo.breach.solve_p99") == 0
+
+
+def test_arm_capture_manual(g, monkeypatch):
+    started = []
+    monkeypatch.setattr(session_mod, "start_profiler",
+                        lambda d: started.append(d) or True)
+    monkeypatch.setattr(session_mod, "stop_profiler", lambda: True)
+    sess = StreamSession(g)
+    sess.arm_capture(1, log_dir="manual-dir")
+    sess.apply(random_batch(g, 16, seed=2))
+    assert started == ["manual-dir"]
+
+
+# ---------------------------------------------------------------------------
+# post-mortem bundles
+# ---------------------------------------------------------------------------
+
+@pytest.mark.guard
+def test_exhaustion_writes_renderable_bundle(g, tmp_path, capsys):
+    """The acceptance path: chaos-forced ladder exhaustion produces a bundle
+    that the CLI renders."""
+    sess = StreamSession(g, guard=GuardConfig(
+        retry_budget=0, postmortem_dir=str(tmp_path)))
+    sess.ranks = ChaosMonkey(seed=9).poison_ranks(sess.ranks, mode="nan",
+                                                  k=1, idx=[7])
+    sess.apply(random_batch(g, 32, seed=14))
+    assert get_registry().counter("guard.escalate.exhausted") == 1
+
+    bundles = sorted(tmp_path.glob("postmortem-*"))
+    assert len(bundles) == 1
+    doc = load_bundle(str(bundles[0]))
+    assert doc["schema"] == postmortem.SCHEMA
+    assert doc["reason"] == "escalation_exhausted"
+    assert "nonfinite" in doc["health"]["flags"]
+    assert doc["journal_seq"] == 1
+    assert doc["extra"]["rungs_walked"] == 0
+    assert (bundles[0] / "flight.jsonl").exists()
+    kinds = {json.loads(line)["kind"]
+             for line in (bundles[0] / "flight.jsonl").read_text().splitlines()}
+    assert "session.engine" in kinds
+    assert "guard.escalate.exhausted" in kinds
+
+    # renders in-process (newest-bundle resolution from the parent dir)...
+    assert postmortem.main([str(tmp_path)]) == 0
+    out = capsys.readouterr().out
+    assert "escalation_exhausted" in out and "nonfinite" in out
+    assert "guard.escalate.exhausted" in out
+    # ...and through the real CLI entry point
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.obs.postmortem", str(bundles[0])],
+        capture_output=True, text=True,
+        cwd=str(Path(__file__).resolve().parents[1]),
+        env={**os.environ,
+             "PYTHONPATH": str(Path(__file__).resolve().parents[1] / "src")})
+    assert proc.returncode == 0, proc.stderr
+    assert "escalation_exhausted" in proc.stdout
+
+
+@pytest.mark.guard
+def test_restore_failure_writes_bundle(tmp_path):
+    with pytest.raises(Exception):
+        StreamSession.restore(str(tmp_path))  # nothing there to restore
+    bundles = sorted(tmp_path.glob("postmortem-*"))
+    assert len(bundles) == 1
+    doc = load_bundle(str(bundles[0]))
+    assert doc["reason"] == "restore_failed"
+    assert "error" in doc["extra"]
+
+
+def test_write_bundle_never_raises(tmp_path):
+    # unwritable parent: swallowed, None returned, failure counted
+    assert write_bundle(str(tmp_path / "nope\0bad"), reason="x") is None
+    assert get_registry().counter("postmortem.failed") == 1
+
+
+def test_bundle_embeds_registry_and_quarantine(tmp_path):
+    get_registry().inc("some.counter", 3)
+    path = write_bundle(str(tmp_path), reason="manual",
+                        health=H_MAX_ITER,
+                        quarantine={"size": 4},
+                        journal_seq=17)
+    assert path is not None
+    doc = load_bundle(path)
+    assert doc["health"]["describe"] == "max_iter"
+    assert doc["quarantine"] == {"size": 4}
+    assert doc["journal_seq"] == 17
+    assert doc["registry"]["counters"]["some.counter"] == 3
